@@ -1,0 +1,63 @@
+"""Paper Table 2: runtime of each bound equation.
+
+The paper benchmarks scalar Java (JMH) latency; the TPU-relevant analogue is
+*vectorized throughput*: ns per element over a 2M-element array, jit'd jnp on
+this host (CPU here; the relative ordering — Mult ~ cheap forms << Arccos —
+is the paper's claim, and is what carries to the TPU VPU where transcendental
+ops cost even more relative to mul/rsqrt).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds
+
+N = 2_000_000
+REPS = 5
+
+
+def _bench(fn, a, b) -> float:
+    f = jax.jit(fn)
+    f(a, b).block_until_ready()          # compile
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        f(a, b).block_until_ready()
+    return (time.perf_counter() - t0) / REPS / a.size * 1e9   # ns/elem
+
+
+def run():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(-1, 1, N), jnp.float64)
+    b = jnp.asarray(rng.uniform(-1, 1, N), jnp.float64)
+    rows = []
+    baseline = _bench(lambda x, y: x + y, a, b)
+    rows.append(("runtime/baseline_add_ns", baseline, "paper: 8.19 ns scalar"))
+    table = [
+        ("euclidean", bounds.lb_euclid, "paper: 10.36 ns"),
+        ("eucl_lb", bounds.lb_euclid_fast, "paper: 10.17 ns"),
+        ("arccos", bounds.lb_arccos, "paper: 610.3 ns (jdk) / 59.0 (jafama)"),
+        ("mult", bounds.lb_mult, "paper: 9.75 ns (recommended)"),
+        ("mult_lb1", bounds.lb_mult_fast1, "paper: 10.31 ns"),
+        ("mult_lb2", bounds.lb_mult_fast2, "paper: 8.55 ns"),
+        ("ub_mult", bounds.ub_mult, "kernel pruning bound"),
+    ]
+    arccos_ns = mult_ns = None
+    for name, fn, note in table:
+        ns = _bench(fn, a, b)
+        rows.append((f"runtime/{name}_ns", ns, note))
+        if name == "arccos":
+            arccos_ns = ns
+        if name == "mult":
+            mult_ns = ns
+    rows.append(("runtime/arccos_over_mult", arccos_ns / mult_ns,
+                 "paper: ~62x (jdk) / 6x (jafama); Mult must win"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.3f},{note}")

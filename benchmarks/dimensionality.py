@@ -1,0 +1,62 @@
+"""Ablation: pruning power vs intrinsic dimensionality and k.
+
+The paper's §2 argues Cosine similarity is NOT immune to the curse of
+dimensionality — its practical advantage comes from real data's low
+intrinsic dimensionality.  This ablation makes that quantitative for the
+search system: block-pruning fraction of the exact kNN as a function of
+(a) intrinsic dimension (number of angular clusters at fixed ambient dim),
+(b) ambient dimension at fixed cluster count, and (c) k.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ref
+from repro.core.index import build_index, search
+
+
+def _data(n, d, n_centers, noise, rng):
+    c = ref.normalize(rng.normal(size=(n_centers, d)))
+    x = c[rng.integers(0, n_centers, n)] + noise * rng.normal(size=(n, d))
+    return ref.normalize(x).astype(np.float32)
+
+
+def run(n: int = 4096):
+    rng = np.random.default_rng(0)
+    rows = []
+    # (a) intrinsic dimensionality sweep (ambient 64)
+    for centers in (4, 16, 64, 4096):   # 4096 ~ fully uniform
+        db = _data(n, 64, centers, 0.05, rng)
+        q = jnp.asarray(db[rng.choice(n, 32, replace=False)])
+        idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+        _, _, st = search(idx, q, 10)
+        rows.append((f"dimensionality/centers{centers}/block_prune_frac",
+                     float(st["block_prune_frac"]),
+                     "intrinsic dim up => pruning down (paper §2)"))
+    # (b) ambient dimension sweep (16 clusters).  Per-coordinate noise is
+    # scaled by 1/sqrt(d) so the ANGULAR spread is dimension-independent —
+    # otherwise the sweep silently raises intrinsic dimension too.
+    for d in (8, 32, 128, 512):
+        db = _data(n, d, 16, 0.4 / np.sqrt(d), rng)
+        q = jnp.asarray(db[rng.choice(n, 32, replace=False)])
+        idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+        _, _, st = search(idx, q, 10)
+        rows.append((f"dimensionality/ambient{d}/block_prune_frac",
+                     float(st["block_prune_frac"]),
+                     "ambient dim ~irrelevant at fixed ANGULAR spread"))
+    # (c) k sweep (16 clusters, d=64)
+    db = _data(n, 64, 16, 0.05, rng)
+    q = jnp.asarray(db[rng.choice(n, 32, replace=False)])
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+    for k in (1, 10, 50):
+        _, _, st = search(idx, q, k)
+        rows.append((f"dimensionality/k{k}/block_prune_frac",
+                     float(st["block_prune_frac"]),
+                     "larger k => lower tau => less pruning"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.4f},{note}")

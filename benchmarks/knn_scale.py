@@ -1,0 +1,48 @@
+"""Search throughput scaling: block-pruned vs brute-force exact kNN.
+
+Wall-clock on this CPU host (XLA jit, single core) across datastore sizes.
+The derived column reports the *work avoided* (tiles or blocks pruned),
+which is hardware-independent, alongside the measured speedup here.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ref
+from repro.core.index import build_index, search, search_brute
+
+
+def _time(f, *args, reps=3):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(sizes=(4096, 16384), d: int = 64, k: int = 10, m: int = 64):
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        c = ref.normalize(rng.normal(size=(16, d)))
+        db = ref.normalize(c[rng.integers(0, 16, n)] +
+                           0.05 * rng.normal(size=(n, d))).astype(np.float32)
+        q = jnp.asarray(db[rng.choice(n, m, replace=False)])
+        idx = build_index(jnp.asarray(db), n_pivots=16, block_size=128)
+        t_brute = _time(lambda: search_brute(idx, q, k))
+        t_pruned = _time(lambda: search(idx, q, k))
+        _, _, stats = search(idx, q, k)
+        rows.append((f"knn_scale/n{n}/brute_us", t_brute * 1e6, ""))
+        rows.append((f"knn_scale/n{n}/pruned_us", t_pruned * 1e6,
+                     f"block_prune_frac={float(stats['block_prune_frac']):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.1f},{note}")

@@ -1,0 +1,76 @@
+"""Pruning power in actual index structures — the paper's deferred
+experiment (§4: "we will not investigate the actual performance in a
+similarity index here, but plan to do this in future work").
+
+Three structures x two bound families, on three data regimes:
+  * VP-tree (paper-faithful CPU index): exact-similarity fraction computed
+    with the Eq. 13 (mult) vs reverse-Eq. 7 (euclid) subtree bounds,
+  * scalar LAESA (per-point pivot table): the reference pruning ceiling,
+  * TPU block index + Pallas kernel: fraction of MXU tiles computed.
+
+Regimes: uniform high-dim (concentration -> little pruning, expected per the
+paper's own curse-of-dimensionality discussion), clustered embeddings (the
+realistic neural-embedding case), and the dedup regime (threshold ~ 1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ref
+from repro.core.index import build_index, search
+from repro.core.vptree import VPTree
+from repro.kernels import ops
+
+
+def _datasets(n=3000, d=64, seed=0):
+    rng = np.random.default_rng(seed)
+    uni = ref.normalize(rng.normal(size=(n, d))).astype(np.float32)
+    c = ref.normalize(rng.normal(size=(8, d)))
+    clu = ref.normalize(
+        c[rng.integers(0, 8, n)] + 0.05 * rng.normal(size=(n, d))
+    ).astype(np.float32)
+    dup = clu.copy()
+    dup[n // 2:] = dup[: n - n // 2] + 1e-3 * rng.normal(
+        size=(n - n // 2, d)).astype(np.float32)   # near-duplicate regime
+    return {"uniform": uni, "clustered": clu, "dedup": dup}
+
+
+def run(k: int = 10, n_queries: int = 32):
+    rows = []
+    rng = np.random.default_rng(1)
+    for regime, db in _datasets().items():
+        q = db[rng.choice(len(db), n_queries, replace=False)]
+        q = ref.normalize(q + 0.01 * rng.normal(size=q.shape)).astype(np.float32)
+
+        vt = VPTree(db, leaf_size=16)
+        _, _, f_mult = vt.knn_batch(q, k, bound="mult")
+        _, _, f_eucl = vt.knn_batch(q, k, bound="euclid")
+        rows.append((f"pruning/{regime}/vptree_exact_frac_mult", f_mult,
+                     "lower = better pruning"))
+        rows.append((f"pruning/{regime}/vptree_exact_frac_euclid", f_eucl,
+                     "mult <= euclid expected"))
+
+        piv = db[rng.choice(len(db), 16, replace=False)]
+        _, _, f_laesa = ref.pruned_knn_reference(q[:8], db, piv, k)
+        rows.append((f"pruning/{regime}/laesa_exact_frac", f_laesa,
+                     "scalar per-point ceiling"))
+
+        idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+        _, _, stats = search(idx, jnp.asarray(q), k, element_stats=True)
+        rows.append((f"pruning/{regime}/block_prune_frac",
+                     float(stats["block_prune_frac"]),
+                     "TPU block granularity"))
+        rows.append((f"pruning/{regime}/elem_prunable_frac",
+                     float(stats["elem_prune_frac"]),
+                     "per-element bound ceiling"))
+
+        _, _, tile_frac = ops.search_index(idx, jnp.asarray(q), k, bm=8)
+        rows.append((f"pruning/{regime}/kernel_tile_computed_frac",
+                     float(tile_frac), "Pallas kernel, bm=8"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.4f},{note}")

@@ -1,0 +1,147 @@
+"""§Roofline: compute / memory / collective terms from the dry-run artifacts.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Sources per cell:
+
+  * HLO FLOPs / bytes — from the *unrolled probes*: ``lower_cell`` lowers the
+    model with k = pattern-length and 2k layers unrolled; per-layer cost is
+    (cost_2k - cost_k) / k and the base (embed/head/loss) is cost_k - k*per.
+    This sidesteps XLA's while-loop cost analysis, which counts a scan body
+    once regardless of trip count.
+  * collective bytes — same extrapolation over the parsed HLO collectives.
+  * per-device memory — from the full (scanned) model's memory_analysis.
+
+Terms (seconds per executed step, per device):
+  compute    = HLO_FLOPs / 197e12
+  memory     = HLO_bytes / 819e9
+  collective = collective_bytes / 50e9
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode) with N = active params;
+the MODEL_FLOPS/HLO_FLOPs ratio exposes remat/dispatch/replication waste.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def _cost(rec):
+    c = rec.get("cost", {})
+    coll = sum(v["bytes"] for v in rec.get("collectives", {}).values())
+    return (c.get("flops", 0.0), c.get("bytes accessed", 0.0), float(coll))
+
+
+def _layers(arch_cfg_layers, pattern_len, unrolled_layers):
+    return unrolled_layers
+
+
+def cell_terms(rec: dict) -> dict | None:
+    """Extrapolated per-device terms for one cell record (needs probes)."""
+    if "probe" not in rec or "error" in rec:
+        return None
+    p1 = rec["probe"]
+    p2 = rec.get("probe2")
+    from repro.configs import ARCHS
+    cfg = ARCHS[rec["arch"]]
+    k = len(cfg.block_pattern)
+    L = cfg.n_layers
+    f1, b1, c1 = _cost(p1)
+    if p2 is not None:
+        f2, b2, c2 = _cost(p2)
+        per = tuple((x2 - x1) / k for x1, x2 in ((f1, f2), (b1, b2), (c1, c2)))
+        base = tuple(x1 - k * p for x1, p in zip((f1, b1, c1), per))
+    else:  # fall back: attribute everything to layers (overcounts base)
+        per = tuple(x / k for x in (f1, b1, c1))
+        base = (0.0, 0.0, 0.0)
+    scale = L / 1.0
+    flops = max(base[0] + per[0] * L, 0.0)
+    bytes_ = max(base[1] + per[1] * L, 0.0)
+    coll = max(base[2] + per[2] * L, 0.0)
+
+    shape_kind = {"train_4k": "train", "prefill_32k": "prefill",
+                  "decode_32k": "decode", "long_500k": "decode"}[rec["shape"]]
+    n_act = rec.get("active_params", cfg.active_param_count())
+    from repro.configs import SHAPES
+    shp = SHAPES[rec["shape"]]
+    n_dev = math.prod(rec["mesh"].values())
+    if shape_kind == "train":
+        model_flops = 6.0 * n_act * shp.batch * shp.seq
+    elif shape_kind == "prefill":
+        model_flops = 2.0 * n_act * shp.batch * shp.seq
+    else:
+        model_flops = 2.0 * n_act * shp.batch          # one token / sequence
+    model_flops_dev = model_flops / n_dev
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])
+    t_max = dominant[1] if dominant[1] > 0 else float("inf")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "x".join(str(v) for v in rec["mesh"].values()),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant[0],
+        "hlo_flops_dev": flops, "hlo_bytes_dev": bytes_, "coll_bytes_dev": coll,
+        "model_flops_dev": model_flops_dev,
+        "useful_flops_ratio": model_flops_dev / flops if flops else 0.0,
+        "roofline_fraction": (model_flops_dev / PEAK_FLOPS) / t_max,
+        "mem_gib_dev": (rec["memory"]["argument_bytes"]
+                        + rec["memory"]["temp_bytes"]) / 2**30,
+    }
+
+
+def load_all(mesh_kind: str = "pod"):
+    d = os.path.join(DRYRUN_DIR, mesh_kind)
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(d, name)) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "skipped": rec["reason"]})
+            continue
+        t = cell_terms(rec)
+        if t:
+            out.append(t)
+        else:
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "error": rec.get("error", "no probe")[:120]})
+    return out
+
+
+def run():
+    rows = []
+    for cell in load_all("pod"):
+        tag = f"roofline/{cell['arch']}/{cell['shape']}"
+        if "skipped" in cell:
+            rows.append((tag + "/skip", 0.0, cell["skipped"]))
+            continue
+        if "error" in cell:
+            rows.append((tag + "/error", -1.0, cell["error"]))
+            continue
+        rows.append((tag + "/dominant_" + cell["dominant"],
+                     cell["roofline_fraction"],
+                     f"compute={cell['t_compute_s']:.2e}s "
+                     f"mem={cell['t_memory_s']:.2e}s "
+                     f"coll={cell['t_collective_s']:.2e}s "
+                     f"useful={cell['useful_flops_ratio']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.4f},{note}")

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure + system benches.
+
+Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
+
+  bound_tightness      — §4.1, Figs. 1–4 (grid averages, max gap, ordering)
+  numerical_stability  — §4.2, Fig. 5
+  bound_runtime        — Table 2 (vectorized throughput analogue)
+  pruning_power        — the paper's declared future work: bounds inside
+                         actual index structures (VP-tree / LAESA / blocks)
+  knn_scale            — end-to-end search timing on this host
+  roofline             — §Roofline terms from the dry-run artifacts (only
+                         emits rows if experiments/dryrun/ is populated)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+import os
+os.environ.setdefault("JAX_ENABLE_X64", "1")   # Table 2 runs in fp64 like the paper
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (bound_runtime, bound_tightness, dimensionality,
+                        knn_scale, numerical_stability, pruning_power,
+                        roofline)
+
+MODULES = [
+    ("bound_tightness", bound_tightness),
+    ("numerical_stability", numerical_stability),
+    ("bound_runtime", bound_runtime),
+    ("pruning_power", pruning_power),
+    ("knn_scale", knn_scale),
+    ("dimensionality", dimensionality),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    failed = 0
+    for name, mod in MODULES:
+        try:
+            for row_name, val, note in mod.run():
+                print(f"{row_name},{val},{note}")
+        except Exception as e:
+            failed += 1
+            print(f"{name}/ERROR,-1,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""End-to-end driver: serve a small LM with batched requests + kNN-LM.
+
+This is the assignment's end-to-end example (serving flavor): build a model,
+harvest a retrieval datastore from its own hidden states, then serve a batch
+of requests where every decode step runs the paper's bound-pruned exact
+search over the datastore and interpolates the next-token distribution.
+
+    PYTHONPATH=src python examples/serve_knnlm.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+main(["--arch", "tinyllama-1.1b", "--smoke", "--requests", "8",
+      "--prompt-len", "32", "--gen", "16", "--knn"])

@@ -1,0 +1,3 @@
+"""Architecture configs (one per assigned arch) + input shapes."""
+from repro.configs.archs import ARCHS, smoke_config  # noqa: F401
+from repro.configs.shapes import SHAPES, Shape, applicable, input_specs, model_kind  # noqa: F401

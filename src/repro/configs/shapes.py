@@ -1,0 +1,100 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+Four shapes per architecture (LM family):
+
+  train_4k      seq 4096   global_batch 256   -> train_step
+  prefill_32k   seq 32768  global_batch 32    -> serve prefill
+  decode_32k    seq 32768  global_batch 128   -> serve_step (1 new token,
+                                                 KV/state cache of 32k)
+  long_500k     seq 524288 global_batch 1     -> serve_step; ONLY for
+                sub-quadratic archs (SSM/hybrid/SWA) — full-attention archs
+                skip it (DESIGN.md §5)
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins (no allocation);
+modality frontends are stubs, so whisper gets frame *embeddings* and
+internvl2 gets patch *embeddings* directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def model_kind(cfg: ModelConfig) -> str:
+    if cfg.encoder_layers > 0:
+        return "whisper"
+    if cfg.vision_seq > 0:
+        return "vlm"
+    return "lm"
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """True if the arch can run long_500k (SSM/hybrid/SWA-bounded)."""
+    types = set(cfg.layer_types)
+    if types <= {"mamba2", "rwkv6", "shared_attn"} and (
+            "mamba2" in types or "rwkv6" in types):
+        return cfg.sliding_window is not None or "shared_attn" not in types
+    return cfg.sliding_window is not None
+
+
+def applicable(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        return False, "full attention is quadratic/unbounded-KV at 500k"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, *, scale: float = 1.0) -> dict:
+    """Abstract inputs for the given cell.  ``scale`` shrinks batch for
+    smoke tests (batch >= 1)."""
+    from repro.models.vlm import VIT_WIDTH
+
+    b = max(1, int(shape.batch * scale))
+    s = shape.seq
+    i32 = jnp.int32
+    kind = model_kind(cfg)
+    f = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": f((b, s), i32),
+            "labels": f((b, s), i32),
+        }
+        if kind == "vlm":
+            specs["patches"] = f((b, cfg.vision_seq, VIT_WIDTH), jnp.bfloat16)
+        if kind == "whisper":
+            specs["frames"] = f((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": f((b, s), i32)}
+        if kind == "vlm":
+            specs["patches"] = f((b, cfg.vision_seq, VIT_WIDTH), jnp.bfloat16)
+        if kind == "whisper":
+            specs["frames"] = f((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a cache of length seq
+    specs = {
+        "tokens": f((b, 1), i32),
+        "cache_len": f((), i32),
+    }
+    return specs

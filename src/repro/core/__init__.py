@@ -1,0 +1,14 @@
+"""Core: the paper's triangle inequality for cosine similarity + exact search.
+
+Public surface:
+  bounds   — Eq. 7–13 elementwise bound functions (jnp)
+  ref      — float64 numpy oracles (independent reference)
+  pivots   — pivot selection
+  index    — TPU-native block-pruned exact kNN (BlockIndex / build / search)
+  vptree   — paper-faithful CPU VP-tree baseline
+  distributed — mesh-sharded datastore search
+"""
+from repro.core import bounds, ref  # noqa: F401
+from repro.core.index import BlockIndex, build_index, search, search_brute  # noqa: F401
+from repro.core.pivots import normalize, select_pivots_maxmin  # noqa: F401
+from repro.core.vptree import VPTree  # noqa: F401

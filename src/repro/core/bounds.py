@@ -1,0 +1,171 @@
+"""Triangle-inequality bounds for Cosine similarity (Schubert, SISAP 2021).
+
+All functions are elementwise over arrays of *similarities*:
+
+    a = sim(x, z)    b = sim(z, y)        a, b in [-1, 1]
+
+and return a bound on ``sim(x, y)``.  Equation numbers follow the paper.
+
+The recommended pair (paper §5) is :func:`lb_mult` / :func:`ub_mult`::
+
+    sim(x,y) >= a*b - sqrt((1-a^2)(1-b^2))      (Eq. 10, tight)
+    sim(x,y) <= a*b + sqrt((1-a^2)(1-b^2))      (Eq. 13, tight)
+
+These are mathematically equivalent to the arccos forms (Eq. 9) but avoid
+trigonometric calls entirely — on TPU the arccos form would lower to slow VPU
+polynomial approximations while the Mult form is pure mul/sub/rsqrt.
+
+Numerical notes (paper §4.2): the ``1 - sim^2`` radicands are clamped at zero.
+When cancellation would occur (sim -> 1) the sqrt term itself vanishes, so the
+clamp does not change the value, it only guards against producing NaN from a
+tiny negative radicand in floating point.
+
+Every function here has a float64 numpy oracle twin in :mod:`repro.core.ref`;
+the property tests in ``tests/test_bounds.py`` check validity (bounds never
+cross the true similarity computed from explicit vectors) and the ordering
+relations of the paper's Fig. 3.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+__all__ = [
+    "lb_euclid",
+    "lb_euclid_fast",
+    "lb_arccos",
+    "lb_mult",
+    "lb_mult_fast1",
+    "lb_mult_fast2",
+    "ub_mult",
+    "ub_euclid",
+    "ub_arccos",
+    "pivot_lower_bound",
+    "pivot_upper_bound",
+    "LOWER_BOUNDS",
+]
+
+
+def _radicand(s: Array) -> Array:
+    """``max(0, 1 - s^2)`` — clamped radicand, see module docstring."""
+    return jnp.maximum(0.0, 1.0 - s * s)
+
+
+def lb_euclid(a: Array, b: Array) -> Array:
+    """Eq. (7): lower bound via the Euclidean / chord-length metric.
+
+    ``sim(x,y) >= a + b - 1 - 2*sqrt((1-a)(1-b))``
+    """
+    rad = jnp.maximum(0.0, (1.0 - a) * (1.0 - b))
+    return a + b - 1.0 - 2.0 * jnp.sqrt(rad)
+
+
+def lb_euclid_fast(a: Array, b: Array) -> Array:
+    """Eq. (8) "Eucl-LB": sqrt-free approximation of Eq. (7); loosest bound.
+
+    ``sim(x,y) >= a + b + 2*min(a,b) - 3``
+    """
+    return a + b + 2.0 * jnp.minimum(a, b) - 3.0
+
+
+def lb_arccos(a: Array, b: Array) -> Array:
+    """Eq. (9): tight lower bound via arc length (angles add on the sphere).
+
+    ``sim(x,y) >= cos(arccos(a) + arccos(b))``
+
+    Mathematically identical to :func:`lb_mult`; kept for the reproduction of
+    the paper's Table 2 / Fig. 5 comparisons.  Inputs are clipped to [-1, 1]
+    so ``arccos`` stays defined under fp roundoff.
+    """
+    ca = jnp.arccos(jnp.clip(a, -1.0, 1.0))
+    cb = jnp.arccos(jnp.clip(b, -1.0, 1.0))
+    return jnp.cos(ca + cb)
+
+
+def lb_mult(a: Array, b: Array) -> Array:
+    """Eq. (10) "Mult" (recommended): tight, trigonometry-free lower bound.
+
+    ``sim(x,y) >= a*b - sqrt((1-a^2)(1-b^2))``
+    """
+    return a * b - jnp.sqrt(_radicand(a) * _radicand(b))
+
+
+def lb_mult_fast1(a: Array, b: Array) -> Array:
+    """Eq. (11) "Mult-LB1": sqrt-free; best of the simplified bounds.
+
+    ``sim(x,y) >= a*b + min(a,b)^2 - 1``
+    """
+    m = jnp.minimum(a, b)
+    return a * b + m * m - 1.0
+
+
+def lb_mult_fast2(a: Array, b: Array) -> Array:
+    """Eq. (12) "Mult-LB2": sqrt-free; strictly inferior to Eq. (11).
+
+    ``sim(x,y) >= 2*a*b - |a - b| - 1``
+    """
+    return 2.0 * a * b - jnp.abs(a - b) - 1.0
+
+
+def ub_mult(a: Array, b: Array) -> Array:
+    """Eq. (13): tight upper bound — the pruning workhorse for kNN search.
+
+    ``sim(x,y) <= a*b + sqrt((1-a^2)(1-b^2))``
+    """
+    return a * b + jnp.sqrt(_radicand(a) * _radicand(b))
+
+
+def ub_euclid(a: Array, b: Array) -> Array:
+    """Upper bound via the chord metric (reverse of Eq. 7; looser than Eq. 13).
+
+    From ``d_sqrtcos(x,y) >= |d(x,z) - d(z,y)|``:
+    ``sim(x,y) <= a + b - 1 + 2*sqrt((1-a)(1-b))``
+    """
+    rad = jnp.maximum(0.0, (1.0 - a) * (1.0 - b))
+    return a + b - 1.0 + 2.0 * jnp.sqrt(rad)
+
+
+def ub_arccos(a: Array, b: Array) -> Array:
+    """Arccos form of the upper bound: ``cos(|arccos(a) - arccos(b)|)``."""
+    ca = jnp.arccos(jnp.clip(a, -1.0, 1.0))
+    cb = jnp.arccos(jnp.clip(b, -1.0, 1.0))
+    return jnp.cos(jnp.abs(ca - cb))
+
+
+# ---------------------------------------------------------------------------
+# Pivot-set (LAESA-style) bounds: combine bounds over several reference points.
+# ---------------------------------------------------------------------------
+
+def pivot_lower_bound(qp: Array, dp: Array, *, axis: int = -1) -> Array:
+    """Best (largest) Eq. 10 lower bound over a set of pivots.
+
+    Args:
+      qp: similarities of the query to each pivot, shape ``[..., P]``.
+      dp: similarities of the database object to each pivot, ``[..., P]``.
+      axis: the pivot axis to reduce over.
+
+    Returns ``max_p lb_mult(qp_p, dp_p)`` — every pivot yields a valid lower
+    bound, so the max is a valid (and the tightest available) lower bound.
+    """
+    return jnp.max(lb_mult(qp, dp), axis=axis)
+
+
+def pivot_upper_bound(qp: Array, dp: Array, *, axis: int = -1) -> Array:
+    """Tightest (smallest) Eq. 13 upper bound over a set of pivots.
+
+    ``min_p ub_mult(qp_p, dp_p)`` — the pruning rule of the block index:
+    a candidate (or block) whose pivot upper bound falls below the running
+    k-th best similarity cannot be a true neighbor.
+    """
+    return jnp.min(ub_mult(qp, dp), axis=axis)
+
+
+#: name -> fn map in the paper's Table 1 order (used by benchmarks/tests).
+LOWER_BOUNDS = {
+    "euclidean": lb_euclid,       # Eq. 7
+    "eucl_lb": lb_euclid_fast,    # Eq. 8
+    "arccos": lb_arccos,          # Eq. 9
+    "mult": lb_mult,              # Eq. 10 (recommended)
+    "mult_lb1": lb_mult_fast1,    # Eq. 11
+    "mult_lb2": lb_mult_fast2,    # Eq. 12
+}

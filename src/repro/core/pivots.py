@@ -1,0 +1,59 @@
+"""Pivot (reference point) selection for LAESA-style bound pruning.
+
+The quality of the Eq. 13 pruning bound depends on how well the pivots
+"cover" the dataset in angle space: a candidate is pruned when some pivot z
+has ``ub_mult(sim(q,z), sim(y,z)) < tau``, which is tightest when z is nearly
+collinear with q or y.  We use greedy max-min (farthest-first / k-center)
+selection in arc distance, the standard choice for metric indexes, plus a
+cheap random fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+
+def normalize(x: Array, eps: float = 1e-12) -> Array:
+    """L2-normalize along the last axis (safe for zero rows)."""
+    n = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(n, eps)
+
+
+def select_pivots_maxmin(db: Array, n_pivots: int, *, first: int = 0) -> Array:
+    """Greedy farthest-first pivot selection (returns pivot *indices*).
+
+    Iteratively picks the point whose maximum similarity to the already
+    selected pivots is smallest (i.e. the angularly farthest point).  Runs in
+    O(n_pivots * n * d) — jit-friendly via ``lax.fori_loop``.
+
+    Args:
+      db: [n, d] database (need not be normalized; it is normalized here).
+      n_pivots: number of pivots to select (>= 1).
+      first: index of the initial pivot (deterministic by default).
+    """
+    dbn = normalize(db.astype(jnp.float32))
+    n = dbn.shape[0]
+
+    def body(i, state):
+        idx, max_sim = state
+        # similarity of every point to the i-1'th chosen pivot
+        prev = dbn[idx[i - 1]]
+        sims = dbn @ prev
+        max_sim = jnp.maximum(max_sim, sims)
+        # next pivot: the point least similar to all chosen so far
+        nxt = jnp.argmin(max_sim)
+        idx = idx.at[i].set(nxt)
+        return idx, max_sim
+
+    idx0 = jnp.zeros((n_pivots,), jnp.int32).at[0].set(first)
+    max_sim0 = jnp.full((n,), -jnp.inf, jnp.float32)
+    idx, _ = jax.lax.fori_loop(1, n_pivots, body, (idx0, max_sim0))
+    return idx
+
+
+def select_pivots_random(n: int, n_pivots: int, seed: int = 0) -> Array:
+    """Uniform random pivot indices (cheap baseline)."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.choice(n, size=n_pivots, replace=False).astype(np.int32))

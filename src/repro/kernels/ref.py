@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels (no Pallas imports).
+
+Each kernel in this package asserts allclose against these in
+``tests/test_kernels.py`` across a sweep of shapes and dtypes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def l2_normalize(x: Array, eps: float = 1e-12) -> Array:
+    n = jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True))
+    return (x.astype(jnp.float32) / jnp.maximum(n, eps)).astype(x.dtype)
+
+
+def cosine_scores(q: Array, db: Array) -> Array:
+    """All-pairs cosine similarity with fused normalization; f32 accumulate."""
+    qn = l2_normalize(q).astype(jnp.float32)
+    dbn = l2_normalize(db).astype(jnp.float32)
+    return qn @ dbn.T
+
+
+def block_bounds(qp: Array, dp_min: Array, dp_max: Array) -> Array:
+    """Per-(query, block) Eq. 13 interval upper bound, min over pivots.
+
+    qp: [M, P]; dp_min/dp_max: [NB, P] -> [M, NB] f32.
+    """
+    qp = qp.astype(jnp.float32)[:, None, :]       # [M, 1, P]
+    lo = dp_min.astype(jnp.float32)[None, :, :]   # [1, NB, P]
+    hi = dp_max.astype(jnp.float32)[None, :, :]
+    rad_q = jnp.maximum(0.0, 1.0 - qp * qp)
+    ub_lo = qp * lo + jnp.sqrt(rad_q * jnp.maximum(0.0, 1.0 - lo * lo))
+    ub_hi = qp * hi + jnp.sqrt(rad_q * jnp.maximum(0.0, 1.0 - hi * hi))
+    at_ends = jnp.maximum(ub_lo, ub_hi)
+    inside = (qp >= lo) & (qp <= hi)
+    per_pivot = jnp.where(inside, 1.0, at_ends)
+    return per_pivot.min(axis=-1)                 # [M, NB]
+
+
+def cosine_topk(q: Array, db: Array, k: int, valid: Array | None = None):
+    """Exact top-k cosine (sims f32, idx i32).  ``valid`` masks db rows."""
+    s = cosine_scores(q, db)
+    if valid is not None:
+        s = jnp.where(valid[None, :], s, -jnp.inf)
+    sims, idx = jax.lax.top_k(s, k)
+    return sims, idx.astype(jnp.int32)
+
+
+def pruned_cosine_topk(
+    q: Array,
+    db: Array,
+    qp: Array,
+    dp_min: Array,
+    dp_max: Array,
+    k: int,
+    valid: Array | None = None,
+    margin: float = 4e-7,
+):
+    """Oracle for the fused kernel *including* its pruning bookkeeping.
+
+    Returns (sims, idx, blocks_computed [M_tiles? -> scalar fraction proxy]).
+    The result must equal plain :func:`cosine_topk` — pruning never changes
+    the answer; only the computed-block count differs.
+    """
+    sims, idx = cosine_topk(q, db, k, valid)
+    ub = block_bounds(qp, dp_min, dp_max)         # [M, NB]
+    # kth best per query after full search (the final tau)
+    tau = sims[:, -1]
+    # a block could have been pruned if its ub (plus margin) is below the
+    # final tau for EVERY query in the tile — tile-size dependent, so here we
+    # report the per-(query, block) prunable fraction as an upper estimate.
+    prunable = (ub + margin) < tau[:, None]
+    return sims, idx, prunable.mean()

@@ -1,0 +1,461 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax fixes the device
+# count at first initialization, and the production meshes below need 256
+# (single pod) / 512 (2 pods) placeholder host devices.
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (lowering fails on spec mismatches),
+  * it fits: ``compiled.memory_analysis()`` per-device bytes,
+  * the cost terms for §Roofline: ``compiled.cost_analysis()`` FLOPs/bytes
+    and the collective bytes parsed from the post-SPMD HLO text.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh pod            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json.  Pass
+``--unrolled-probe`` to additionally lower a pattern-length unrolled model
+for exact per-layer cost attribution (scan bodies are counted once by XLA's
+cost analysis; the roofline script rescales using the probe).
+"""
+import argparse
+import json
+import math
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, applicable, input_specs, model_kind
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ModelConfig
+from repro.models.registry import model_fns
+from repro.optim import adamw
+from repro.train.train_step import make_loss_fn
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# per-arch microbatch accumulation for train_4k (fits HBM; hillclimbed later)
+TRAIN_ACCUM = {
+    "qwen2-72b": 8, "mixtral-8x22b": 8, "qwen2.5-14b": 4,
+}
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+_sanitize = shd.sanitize
+
+
+def param_shardings(abstract, mesh: Mesh):
+    def leaf(path, x):
+        spec = shd.param_spec(path, x.shape)
+        return NamedSharding(mesh, _sanitize(spec, x.shape, mesh))
+    return jax.tree_util.tree_map_with_path(leaf, abstract)
+
+
+def batch_shardings(abstract, mesh: Mesh, dp_axes):
+    def leaf(x):
+        spec = P(dp_axes) if (x.ndim >= 1 and x.shape[0] % _dp_size(mesh, dp_axes) == 0) else P()
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(leaf, abstract)
+
+
+def _dp_size(mesh, dp_axes):
+    return math.prod(mesh.shape[a] for a in dp_axes)
+
+
+def cache_shardings(abstract, mesh: Mesh, dp_axes):
+    """KV caches: batch -> data axes, heads dim -> model (when divisible).
+
+    Caches under a scanned run carry a leading layer axis, so attn caches
+    are [L, B, S, KV, dh] (or [B, S, KV, dh] unstacked) and the SSM/RWKV
+    states are [L, B, H, ...] / [B, H, ...]; handle both ranks.
+    """
+    def leaf(path, x):
+        name = shd.path_name(path)
+        dims = [None] * x.ndim
+        # locate (batch, sharded-feature) axes from the TRAILING structure,
+        # which is invariant to the optional leading layer-stack axis:
+        if ("/k" in name or "/v" in name or "cross_" in name) and x.ndim >= 4:
+            b_ax, f_ax = x.ndim - 4, x.ndim - 2          # [., B, S, KV, dh]
+        elif ("ssm_state" in name or "wkv_state" in name) and x.ndim >= 4:
+            b_ax, f_ax = x.ndim - 4, x.ndim - 3          # [., B, H, ., .]
+        elif x.ndim >= 3:                                # conv/shift [., B, ., C]
+            b_ax, f_ax = x.ndim - 3, None
+        else:
+            b_ax, f_ax = 0, None
+        if x.shape[b_ax] % _dp_size(mesh, dp_axes) == 0:
+            dims[b_ax] = dp_axes
+        if f_ax is not None:
+            dims[f_ax] = ("model",)
+        spec = _sanitize(P(*dims), x.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(leaf, abstract)
+
+
+# ---------------------------------------------------------------------------
+# collective parsing
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*((?:[a-z0-9_]+\[[^\]]*\](?:,\s*)?)+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|s32|u32|s64|pred|u16)\[([\d,]*)\]")
+
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+          "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum RESULT-shape bytes of every collective op, by kind.
+
+    Counts sync ops (``all-gather(``) and async starts (``all-gather-start``,
+    whose result tuple is (operand-alias, destination) — only the LAST tuple
+    element is payload); ``-done`` ops are aliases and are skipped.
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"= ((?:\()?[a-z0-9_]+\[[^=]*?) (all-gather|all-reduce|"
+            r"reduce-scatter|all-to-all|collective-permute)(-start)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        shapes = []
+        for dm in _SHAPE_RE.finditer(m.group(1)):
+            dims = [int(d) for d in dm.group(2).split(",") if d]
+            shapes.append(_BYTES[dm.group(1)] * int(np.prod(dims))
+                          if dims else _BYTES[dm.group(1)])
+        if not shapes:
+            continue
+        # async start: (alias, dest) tuple -> dest only; sync: single shape
+        nbytes = shapes[-1]
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+def prepare_cfg(arch: str, shape_name: str, mesh: Mesh, *,
+                unrolled: bool = False, unroll_mult: int = 1) -> ModelConfig:
+    cfg = ARCHS[arch]
+    tp = mesh.shape.get("model", 1)
+    # KV replication: smallest rep with (kv*rep) % tp == 0 that still divides
+    # the query-head group structure (kv*rep must divide n_heads); rep=1
+    # (replicated-KV sharding fallback) when impossible (whisper, internvl).
+    rep = 1
+    group = cfg.n_heads // cfg.n_kv_heads
+    for cand in range(1, group + 1):
+        if group % cand == 0 and (cfg.n_kv_heads * cand) % tp == 0:
+            rep = cand
+            break
+    kw = dict(kv_repeat=rep)
+    if bool(int(os.environ.get("REPRO_HEAD_PAD", "0"))) and (
+            cfg.n_heads % tp or (cfg.n_kv_heads * rep) % tp):
+        # q-group padding search (§Perf.S2): smallest padded group g' with
+        # kv*g' % tp == 0 and a rep | g' making the KV cache shardable too
+        for g2 in range(group, 4 * group + 1):
+            if (cfg.n_kv_heads * g2) % tp:
+                continue
+            reps = [r for r in range(1, g2 + 1)
+                    if g2 % r == 0 and (cfg.n_kv_heads * r) % tp == 0]
+            if reps:
+                kw["q_group_pad"] = g2
+                kw["kv_repeat"] = reps[0]
+                break
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        kw["max_seq_len"] = shape.seq
+    else:
+        kw["max_seq_len"] = shape.seq
+    if unrolled:
+        kw["use_scan"] = False
+        kw["n_layers"] = len(cfg.block_pattern) * unroll_mult
+        if cfg.encoder_layers:
+            kw["encoder_layers"] = unroll_mult
+    return cfg.replace(**kw)
+
+
+def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               unrolled: bool = False, unroll_mult: int = 1,
+               compile_: bool = True) -> dict:
+    cfg = prepare_cfg(arch, shape_name, mesh, unrolled=unrolled,
+                      unroll_mult=unroll_mult)
+    shape = SHAPES[shape_name]
+    fns = model_fns(cfg)
+    multi_pod = "pod" in mesh.axis_names
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    # serving mode (REPRO_SERVE_BF16=1): bf16 TP-resident weights, no FSDP —
+    # decode must not all-gather parameter shards every token (§Perf.S1)
+    serve_bf16 = (shape.kind != "train"
+                  and bool(int(os.environ.get("REPRO_SERVE_BF16", "0"))))
+    pure_dp = bool(int(os.environ.get("REPRO_PURE_DP", "0")))
+    rules = shd.default_rules(multi_pod=multi_pod, fsdp=not serve_bf16,
+                              pure_dp=pure_dp)
+    shd.set_rules(mesh, rules)
+    key = jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+    try:
+        if True:  # all shardings are explicit NamedShardings; no mesh context
+            abstract_params = jax.eval_shape(fns.init, key)
+            if serve_bf16:
+                abstract_params = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+                    if (x.dtype == jnp.float32 and len(x.shape) >= 2) else x,
+                    abstract_params)
+            p_sh = param_shardings(abstract_params, mesh)
+
+            if shape.kind == "train":
+                accum = 1 if unrolled else TRAIN_ACCUM.get(arch, 1)
+                # bf16 parameter storage (fp32 master in the optimizer):
+                # halves FSDP gather + gradient traffic at the source
+                bf16_params = bool(int(os.environ.get(
+                    "REPRO_TRAIN_BF16_PARAMS", "0")))
+                if bf16_params:
+                    abstract_params = jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+                        if (x.dtype == jnp.float32 and len(x.shape) >= 2) else x,
+                        abstract_params)
+                    p_sh = param_shardings(abstract_params, mesh)
+                loss_fn = make_loss_fn(
+                    fns, cfg, cast_bf16=bool(int(os.environ.get(
+                        "REPRO_CAST_BF16", "0"))))
+
+                def train_step(params, opt_m, batch):
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, batch)
+                    if bool(int(os.environ.get("REPRO_BF16_GRAD_REDUCE", "0"))):
+                        # bf16 gradient synchronization (standard at fleet
+                        # scale; int8+EF in optim/compression.py goes 4x):
+                        # halves the dominant backward all-reduce payload
+                        grads = jax.tree.map(
+                            lambda g: g.astype(jnp.bfloat16), grads)
+                    # force gradients onto the parameter sharding: XLA then
+                    # reduce-scatters the DP sync instead of all-reducing and
+                    # keeping full-size gradient buffers alive
+                    grads = jax.tree.map(
+                        lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                        grads, p_sh)
+                    # fused AdamW-style update keeps the lowering honest about
+                    # optimizer memory/flops without the full adamw tree code
+                    new_m = jax.tree.map(lambda m, g: 0.9 * m + g.astype(jnp.float32),
+                                         opt_m, grads)
+                    new_p = jax.tree.map(
+                        lambda p, m: (p.astype(jnp.float32) - 1e-4 * m).astype(p.dtype),
+                        params, new_m)
+                    return new_p, new_m, loss
+
+                if accum > 1:
+                    b = specs["tokens"].shape[0]
+                    specs = {k: jax.ShapeDtypeStruct(
+                        (v.shape[0] // accum,) + v.shape[1:], v.dtype)
+                        for k, v in specs.items()}
+                abstract_m = jax.eval_shape(
+                    lambda p: jax.tree.map(
+                        lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                    abstract_params)
+                m_sh = jax.tree.map(
+                    lambda s: s, p_sh)  # moments share param sharding
+                b_sh = batch_shardings(specs, mesh, dp_axes)
+                fn = jax.jit(train_step,
+                             in_shardings=(p_sh, m_sh, b_sh),
+                             out_shardings=(p_sh, m_sh, NamedSharding(mesh, P())),
+                             donate_argnums=(0, 1))
+                lowered = fn.lower(abstract_params, abstract_m, specs)
+            elif shape.kind == "prefill":
+                def prefill(params, batch):
+                    hidden, _, _ = fns.forward(params, batch)
+                    logits = fns.lm_head(params, hidden[:, -1:])
+                    return logits
+
+                b_sh = batch_shardings(specs, mesh, dp_axes)
+                fn = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                             out_shardings=NamedSharding(mesh, P()))
+                lowered = fn.lower(abstract_params, specs)
+            else:  # decode
+                bsz = shape.batch
+                abstract_cache = jax.eval_shape(
+                    lambda p, b: fns.cache_init(p, b, bsz, shape.seq),
+                    abstract_params, _abstract_frames(cfg, bsz))
+                c_sh = cache_shardings(abstract_cache, mesh, dp_axes)
+
+                def decode(params, cache, tokens, cache_len):
+                    hidden, new_cache = fns.decode_step(params, tokens, cache,
+                                                        cache_len)
+                    logits = fns.lm_head(params, hidden)
+                    return logits, new_cache
+
+                tok_spec = jax.ShapeDtypeStruct((bsz, 1), jnp.int32)
+                b_sh = batch_shardings({"t": tok_spec}, mesh, dp_axes)["t"]
+                fn = jax.jit(decode,
+                             in_shardings=(p_sh, c_sh, b_sh, NamedSharding(mesh, P())),
+                             out_shardings=(NamedSharding(mesh, P()), c_sh),
+                             donate_argnums=(1,))
+                lowered = fn.lower(abstract_params, abstract_cache, tok_spec,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+
+            result = {
+                "arch": arch, "shape": shape_name,
+                "mesh": dict(mesh.shape), "unrolled": unrolled,
+                "lower_s": round(time.time() - t0, 1),
+                "kv_repeat": cfg.kv_repeat,
+                "params": int(cfg.param_count()),
+                "active_params": int(cfg.active_param_count()),
+            }
+            if compile_:
+                t1 = time.time()
+                compiled = lowered.compile()
+                result["compile_s"] = round(time.time() - t1, 1)
+                mem = compiled.memory_analysis()
+                result["memory"] = {
+                    "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                    "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                    "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                    "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+                }
+                try:
+                    ca = compiled.cost_analysis()
+                    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+                    result["cost"] = {k: float(v) for k, v in ca.items()
+                                      if isinstance(v, (int, float)) and (
+                                          "flops" in k or "bytes" in k or k in ("utilization",))}
+                except Exception as e:  # cost analysis is best-effort on CPU
+                    result["cost"] = {"error": str(e)}
+                hlo = compiled.as_text()
+                result["collectives"] = collective_bytes(hlo)
+                result["hlo_lines"] = hlo.count("\n")
+            return result
+    finally:
+        shd.set_rules(None, None)
+
+
+def _abstract_frames(cfg, bsz):
+    from repro.models.vlm import VIT_WIDTH
+    kind = model_kind(cfg)
+    batch = {"tokens": jax.ShapeDtypeStruct((bsz, 1), jnp.int32)}
+    if kind == "whisper":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (bsz, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if kind == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (bsz, cfg.vision_seq, VIT_WIDTH), jnp.bfloat16)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_cell(arch, shape_name, mesh_kind, *, unrolled_probe=False,
+             out_dir=OUT_DIR):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    cfg = ARCHS[arch]
+    ok, reason = applicable(cfg, SHAPES[shape_name])
+    cell_dir = os.path.join(out_dir, mesh_kind)
+    os.makedirs(cell_dir, exist_ok=True)
+    path = os.path.join(cell_dir, f"{arch}__{shape_name}.json")
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": dict(mesh.shape),
+               "skipped": True, "reason": reason}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"SKIP  {arch} x {shape_name} [{mesh_kind}]: {reason}")
+        return rec
+    try:
+        rec = lower_cell(arch, shape_name, mesh)
+        if unrolled_probe:
+            rec["probe"] = lower_cell(arch, shape_name, mesh, unrolled=True,
+                                      unroll_mult=1)
+            rec["probe2"] = lower_cell(arch, shape_name, mesh, unrolled=True,
+                                       unroll_mult=2)
+        status = "OK"
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": dict(mesh.shape),
+               "error": "".join(traceback.format_exception_only(e)).strip(),
+               "traceback": traceback.format_exc()[-4000:]}
+        status = "FAIL"
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    extra = ""
+    if "memory" in rec:
+        per_dev = (rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"])
+        extra = (f" mem/dev={per_dev/2**30:.2f}GiB "
+                 f"compile={rec.get('compile_s')}s "
+                 f"coll={sum(v['bytes'] for v in rec.get('collectives', {}).values())/2**20:.0f}MiB")
+    print(f"{status:4s}  {arch} x {shape_name} [{mesh_kind}]{extra}", flush=True)
+    return rec
+
+
+def refresh_probes(arch, shape_name, mesh_kind, out_dir=OUT_DIR):
+    """Re-lower only the unrolled probes of an existing cell record."""
+    path = os.path.join(out_dir, mesh_kind, f"{arch}__{shape_name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("skipped") or "error" in rec:
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    try:
+        rec["probe"] = lower_cell(arch, shape_name, mesh, unrolled=True,
+                                  unroll_mult=1)
+        rec["probe2"] = lower_cell(arch, shape_name, mesh, unrolled=True,
+                                   unroll_mult=2)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"PROBE {arch} x {shape_name} [{mesh_kind}] refreshed", flush=True)
+    except Exception as e:
+        print(f"PROBE-FAIL {arch} x {shape_name}: {e}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--unrolled-probe", action="store_true")
+    ap.add_argument("--probes-only", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args(argv)
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                if args.probes_only:
+                    refresh_probes(arch, shape_name, mesh_kind, args.out)
+                    continue
+                rec = run_cell(arch, shape_name, mesh_kind,
+                               unrolled_probe=args.unrolled_probe,
+                               out_dir=args.out)
+                n_fail += 1 if "error" in rec else 0
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Training driver.
+
+CPU-scale demo (this container)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --batch 8 --seq 64
+
+Production shape (on a real pod slice, same code: remove --smoke, point
+--mesh at the pod): builds the (data, model) mesh, installs sharding rules,
+shards params/opt with the dry-run's param_shardings, and runs the Trainer
+with async checkpointing, preemption handling, and the straggler watchdog.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", default="synthetic",
+                    help="'synthetic' or a path to an int32 token file")
+    ap.add_argument("--mesh", default="host",
+                    help="host | pod (16x16) | multipod (2x16x16)")
+    args = ap.parse_args(argv)
+
+    from functools import partial
+    from repro.configs import ARCHS, smoke_config
+    from repro.data.pipeline import SyntheticLM, TokenFileSource
+    from repro.dist import sharding as shd
+    from repro.models import model_fns
+    from repro.optim import schedule
+    from repro.train.train_step import init_state, make_train_step
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = smoke_config(args.arch) if args.smoke else ARCHS[args.arch]
+    fns = model_fns(cfg)
+
+    make_global = None
+    if args.mesh != "host":
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch.dryrun import param_shardings
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+        shd.set_rules(mesh, shd.default_rules(
+            multi_pod=(args.mesh == "multipod"), fsdp=True))
+        dp = ("pod", "data") if args.mesh == "multipod" else ("data",)
+        batch_sh = NamedSharding(mesh, P(dp))
+        make_global = lambda b: jax.tree.map(
+            lambda x: jax.make_array_from_process_local_data(batch_sh, x), b)
+
+    step_fn = jax.jit(make_train_step(
+        fns, cfg,
+        lr_schedule=partial(schedule.warmup_cosine, peak_lr=args.lr,
+                            warmup_steps=max(args.steps // 20, 5),
+                            total_steps=args.steps),
+        accum=args.accum, compress_grads=args.compress_grads))
+    state = init_state(fns, jax.random.PRNGKey(0),
+                       compress_grads=args.compress_grads)
+
+    if args.data == "synthetic":
+        data = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=0)
+    else:
+        data = TokenFileSource(args.data, args.seq, args.batch, seed=0)
+
+    tc = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir, log_every=10)
+    trainer = Trainer(step_fn, state, data, tc, make_global=make_global)
+    out = trainer.run()
+    losses = [h["loss"] for h in out["history"]]
+    if losses:
+        print(f"done: step {out['final_step']}, "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+              f"stragglers={out['stragglers']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: generic LM over heterogeneous blocks + enc-dec + VLM wrappers."""
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+from repro.models.registry import ModelFns, model_fns, synthetic_batch  # noqa: F401

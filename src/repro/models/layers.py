@@ -1,0 +1,329 @@
+"""Shared neural-net layers: norms, RoPE, GQA flash attention, GLU MLPs.
+
+Functional style throughout: ``<layer>_init(key, cfg, ...) -> params`` and
+``<layer>_apply(params, x, ...) -> y`` with params as plain dicts of arrays —
+``jax.eval_shape``-friendly so the dry-run never allocates real weights.
+
+Attention is a chunked online-softmax ("flash") implementation in pure JAX:
+memory stays O(chunk_q * chunk_k) per head regardless of sequence length,
+which is what lets the 32k-token cells lower without materializing S^2
+score matrices.  Sliding-window (Mixtral/Zamba2-long) and causal masks are
+applied per tile.  Softmax statistics are fp32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import sharding as shd
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if len(shape) == 3:  # [d, h, dh] fused head projections
+        fan_in = shape[0]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.p_dtype)}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.p_dtype)
+    return p
+
+
+def norm_apply(p, x: Array, cfg: ModelConfig) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, dh: int | None = None) -> Array:
+    dh = dh or cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    return inv  # [dh/2]
+
+
+def rope_apply(x: Array, positions: Array, inv_freq: Array) -> Array:
+    """x: [..., S, H, Dh]; positions broadcastable to [..., S]."""
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # [..., S, dh/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), cfg.p_dtype),
+        "wk": dense_init(ks[1], (d, kv, dh), cfg.p_dtype),
+        "wv": dense_init(ks[2], (d, kv, dh), cfg.p_dtype),
+        "wo": dense_init(ks[3], (h, dh, d), cfg.p_dtype, scale=1.0 / math.sqrt(h * dh)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), cfg.p_dtype)
+        p["bk"] = jnp.zeros((kv, dh), cfg.p_dtype)
+        p["bv"] = jnp.zeros((kv, dh), cfg.p_dtype)
+    return p
+
+
+def _tile_mask(q_pos, k_pos, causal: bool, window: int | None):
+    """[Q, K] bool mask tile from absolute positions."""
+    d = q_pos[:, None] - k_pos[None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m &= d >= 0
+    if window is not None:
+        m &= d < window
+    return m
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+    kv_valid: Array | None = None,
+) -> Array:
+    """Chunked online-softmax attention.
+
+    q: [B, Sq, H, Dh];  k/v: [B, Sk, KV, Dh] with H % KV == 0.
+    ``q_offset``: absolute position of q[0] (cross/self decode alignment).
+    ``kv_valid``: [B, Sk] bool — masks cache padding.
+    Returns [B, Sq, H, Dh] in q.dtype; softmax in fp32.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    # pad to tile multiples
+    pq, pk = (-Sq) % cq, (-Sk) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kvv = kv_valid
+    if pk or kvv is not None:
+        base = jnp.ones((B, Sk), bool) if kvv is None else kvv
+        kvv = jnp.pad(base, ((0, 0), (0, pk)))
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+    scale = 1.0 / math.sqrt(Dh)
+
+    # double scan: q chunks outer, kv chunks inner — peak intermediate is one
+    # [B, cq, H, ck] score tile, independent of S.
+    qt = jnp.moveaxis(q.reshape(B, nq, cq, H, Dh), 1, 0)    # [nq,B,cq,H,Dh]
+    kt = jnp.moveaxis(k.reshape(B, nk, ck, KV, Dh), 1, 0)   # [nk,B,ck,KV,Dh]
+    vt = jnp.moveaxis(v.reshape(B, nk, ck, KV, Dh), 1, 0)
+    q_pos = q_offset + jnp.arange(nq * cq).reshape(nq, cq)
+    k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+    kvv_s = (jnp.moveaxis(kvv.reshape(B, nk, ck), 1, 0)
+             if kvv is not None else jnp.ones((nk, B, ck), bool))
+
+    def q_step(_, q_in):
+        qc, qp = q_in                       # [B,cq,H,Dh], [cq]
+        qf = qc.astype(jnp.float32)
+
+        def kv_step(carry, kv_in):
+            m_run, l_run, acc = carry       # [B,cq,H], [B,cq,H], [B,cq,H,Dh]
+            kc, vc, kp, kval = kv_in        # [B,ck,KV,Dh], ..., [ck], [B,ck]
+            kg = jnp.repeat(kc, g, axis=2).astype(jnp.float32)
+            vg = jnp.repeat(vc, g, axis=2).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bqhk", qf, kg) * scale
+            mask = _tile_mask(qp, kp, causal, window)[None, :, None, :]
+            mask = mask & kval[:, None, None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isneginf(m_run), -jnp.inf, m_run) - m_safe)
+            corr = jnp.where(jnp.isneginf(m_run), 0.0, corr)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, vg)
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((B, cq, H), -jnp.inf, jnp.float32),
+            jnp.zeros((B, cq, H), jnp.float32),
+            jnp.zeros((B, cq, H, Dh), jnp.float32),
+        )
+        # checkpoint the tile body: backward recomputes the [B,cq,H,ck] score
+        # tile instead of storing one per kv step (flash-backward memory law)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), init,
+                                      (kt, vt, k_pos, kvv_s))
+        out_c = acc / jnp.maximum(l, 1e-30)[..., None]      # [B,cq,H,Dh]
+        return None, out_c.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (qt, q_pos))        # [nq,B,cq,H,Dh]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * cq, H, Dh)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def attn_apply(
+    p, x: Array, cfg: ModelConfig, *,
+    positions: Array | None = None,
+    cache: dict | None = None,
+    cache_len: Array | None = None,
+    kv_override: tuple[Array, Array] | None = None,
+    causal: bool = True,
+):
+    """Self-attention (or cross-attention via ``kv_override``).
+
+    Training/prefill: ``cache=None`` — full-sequence flash attention.
+    Decode: ``cache = {"k": [B,Smax,KV,Dh], "v": ...}`` with ``cache_len``
+    the number of valid entries; x is [B, 1, D].  Returns (y, new_cache).
+    """
+    B, S, D = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    inv_freq = rope_freqs(cfg)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    if kv_override is None:
+        kx = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        vx = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if "bk" in p:
+            kx = kx + p["bk"].astype(x.dtype)
+            vx = vx + p["bv"].astype(x.dtype)
+    else:
+        kx, vx = kv_override
+
+    if positions is None:
+        offset = cache_len if cache_len is not None else 0
+        positions = jnp.arange(S) + offset
+        positions = jnp.broadcast_to(positions, (B, S))
+    q = rope_apply(q, positions, inv_freq)
+    if kv_override is None:
+        kx = rope_apply(kx, positions, inv_freq)
+    g_orig = h // kv
+    g_pad = cfg.q_group_pad
+    if g_pad is not None and g_pad > g_orig:
+        # q-group padding: insert zero q-heads at each KV group's tail so the
+        # padded head count shards over TP.  Zero queries attend uniformly to
+        # their group's values, but those outputs are SLICED OFF below before
+        # wo — outputs are bit-identical to the unpadded model (tested).
+        qg = q.reshape(B, S, kv, g_orig, cfg.head_dim)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, g_pad - g_orig), (0, 0)))
+        q = qg.reshape(B, S, kv * g_pad, cfg.head_dim)
+    if cfg.kv_repeat > 1:
+        # Megatron-style KV replication: make the KV head count divisible by
+        # the TP degree (params stay at n_kv_heads -> checkpoint compatible).
+        kx = jnp.repeat(kx, cfg.kv_repeat, axis=2)
+        vx = jnp.repeat(vx, cfg.kv_repeat, axis=2)
+
+    q = shd.shard(q, "batch", None, "heads", None)
+    kx = shd.shard(kx, "batch", None, "kv_heads", None)
+    vx = shd.shard(vx, "batch", None, "kv_heads", None)
+
+    new_cache = cache
+    if cache is not None:
+        idx = cache_len  # scalar
+        Smax = cache["k"].shape[1]
+        ring = (cfg.sliding_window is not None and Smax == cfg.sliding_window
+                and S == 1)
+        if ring:
+            # rolling SWA buffer: slot = t mod W; every live slot is inside
+            # the window by construction, RoPE was baked at write time, so
+            # masking reduces to "slot is filled".
+            write_at = jnp.mod(idx, Smax)
+            kvalid = jnp.broadcast_to(
+                jnp.arange(Smax)[None, :] < jnp.minimum(idx + 1, Smax), (B, Smax))
+            causal, window, q_off = False, None, 0
+        else:
+            write_at = idx
+            # causal across the cache: q row t attends to kv <= idx + t (and
+            # within the window); S == 1 (decode) and S > 1 (cache-filling
+            # prefill) both route through q_offset.
+            kvalid = jnp.broadcast_to(
+                jnp.arange(Smax)[None, :] < (idx + S), (B, Smax))
+            causal, window, q_off = True, cfg.sliding_window, idx
+        ck = jax.lax.dynamic_update_slice(cache["k"], kx.astype(cache["k"].dtype),
+                                          (0, write_at, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vx.astype(cache["v"].dtype),
+                                          (0, write_at, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        out = flash_attention(
+            q, ck.astype(x.dtype), cv.astype(x.dtype),
+            causal=causal, window=window, q_offset=q_off,
+            kv_valid=kvalid,
+            chunk_q=min(max(S, 8), cfg.attn_chunk_q), chunk_k=cfg.attn_chunk_k,
+        )
+    else:
+        out = flash_attention(
+            q, kx, vx, causal=causal, window=cfg.sliding_window,
+            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+        )
+    if g_pad is not None and g_pad > g_orig:
+        out = out.reshape(B, S, kv, g_pad, cfg.head_dim)[:, :, :, :g_orig]
+        out = out.reshape(B, S, h, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = shd.shard(y, "batch", None, "model_embed")
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (GLU family)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    glu = cfg.mlp_kind in ("swiglu", "geglu")
+    p = {
+        "w_up": dense_init(ks[0], (d, f), cfg.p_dtype),
+        "w_down": dense_init(ks[1], (f, d), cfg.p_dtype),
+    }
+    if glu:
+        p["w_gate"] = dense_init(ks[2], (d, f), cfg.p_dtype)
+    return p
+
+
+def mlp_apply(p, x: Array, cfg: ModelConfig) -> Array:
+    up = x @ p["w_up"].astype(x.dtype)
+    up = shd.shard(up, "batch", None, "ffn")
+    if cfg.mlp_kind == "swiglu":
+        g = x @ p["w_gate"].astype(x.dtype)
+        hidden = jax.nn.silu(g) * up
+    elif cfg.mlp_kind == "geglu":
+        g = x @ p["w_gate"].astype(x.dtype)
+        hidden = jax.nn.gelu(g) * up
+    else:
+        hidden = jax.nn.gelu(up)
+    y = hidden @ p["w_down"].astype(x.dtype)
+    return shd.shard(y, "batch", None, "model_embed")

@@ -1,0 +1,294 @@
+"""Generic decoder LM over heterogeneous block stacks.
+
+Consecutive layers of the same block type form a *run*; a run of length > 1
+is executed with ``lax.scan`` over stacked parameters (``cfg.use_scan``),
+which keeps the HLO size O(#distinct runs) — this is what makes 80-layer
+models lowerable/compilable in minutes instead of hours, and it is also the
+standard production trick for fast compile at scale.  ``cfg.remat`` wraps
+each layer body in ``jax.checkpoint`` so the 32k-sequence cells fit HBM.
+
+Zamba2-style ``shared_attn`` blocks are weight-tied: one parameter set at
+the top level, applied at every occurrence, consuming ``concat(x, x0)``
+where x0 is the embedding-stream output (arXiv:2411.15242).
+
+The forward pass returns final *hidden states*; logits are produced by
+:func:`lm_head_apply` (the trainer uses a chunked cross-entropy that never
+materializes [B, S, V] — see ``repro/train/losses.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import sharding as shd
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (attn_apply, attn_init, dense_init, mlp_apply,
+                                 mlp_init, norm_apply, norm_init)
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _block_init(key, btype: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    if btype in ("attn", "moe"):
+        p = {
+            "ln1": norm_init(cfg),
+            "attn": attn_init(ks[0], cfg),
+            "ln2": norm_init(cfg),
+        }
+        if btype == "attn":
+            p["mlp"] = mlp_init(ks[1], cfg)
+        else:
+            p["moe"] = moe_mod.moe_init(ks[1], cfg)
+        return p
+    if btype == "mamba2":
+        return {"ln1": norm_init(cfg), "ssm": ssm_mod.mamba2_init(ks[0], cfg)}
+    if btype == "rwkv6":
+        return {"rwkv": rwkv_mod.rwkv6_init(ks[0], cfg)}
+    raise ValueError(f"unknown block type {btype!r}")
+
+
+def _block_apply(btype: str, p, x: Array, cfg: ModelConfig, *,
+                 cache=None, cache_len=None):
+    """Returns (x_out, new_cache, aux_loss)."""
+    # Pin the remat-saved residual to the activation dtype: without the
+    # barrier XLA hoists the backward's f32 converts into the saved stack
+    # (f32[L,B,S,D] instead of bf16 -> 2x residual memory; observed on the
+    # qwen2-72b train_4k dry-run, EXPERIMENTS.md §Perf).
+    if cache is None:
+        x = jax.lax.optimization_barrier(x)
+    aux = jnp.zeros((), jnp.float32)
+    if btype in ("attn", "moe"):
+        h = norm_apply(p["ln1"], x, cfg)
+        a, new_attn_cache = attn_apply(
+            p["attn"], h, cfg, cache=None if cache is None else cache["attn"],
+            cache_len=cache_len)
+        x = x + a
+        h2 = norm_apply(p["ln2"], x, cfg)
+        if btype == "attn":
+            x = x + mlp_apply(p["mlp"], h2, cfg)
+        else:
+            y, aux = moe_mod.moe_apply(p["moe"], h2, cfg,
+                                       no_drop=cache is not None)
+            x = x + y
+        new_cache = None if cache is None else {"attn": new_attn_cache}
+        return x, new_cache, aux
+    if btype == "mamba2":
+        h = norm_apply(p["ln1"], x, cfg)
+        y, new_ssm = ssm_mod.mamba2_apply(
+            p["ssm"], h, cfg, cache=None if cache is None else cache["ssm"])
+        new_cache = None if cache is None else {"ssm": new_ssm}
+        return x + y, new_cache, aux
+    if btype == "rwkv6":
+        y, new_rw = rwkv_mod.rwkv6_apply(
+            p["rwkv"], x, cfg, cache=None if cache is None else cache["rwkv"])
+        new_cache = None if cache is None else {"rwkv": new_rw}
+        return y, new_cache, aux   # residuals are internal to RWKV blocks
+    raise ValueError(btype)
+
+
+def _block_cache_init(btype: str, cfg: ModelConfig, batch: int, max_seq: int):
+    if btype in ("attn", "moe", "shared_attn"):
+        kv, dh = cfg.n_kv_heads * cfg.kv_repeat, cfg.head_dim
+        if cfg.sliding_window is not None:
+            max_seq = min(max_seq, cfg.sliding_window)   # rolling SWA buffer
+        return {"attn": {
+            "k": jnp.zeros((batch, max_seq, kv, dh), cfg.act_dtype),
+            "v": jnp.zeros((batch, max_seq, kv, dh), cfg.act_dtype),
+        }}
+    if btype == "mamba2":
+        return {"ssm": ssm_mod.mamba2_cache_init(cfg, batch)}
+    if btype == "rwkv6":
+        return {"rwkv": rwkv_mod.rwkv6_cache_init(cfg, batch)}
+    raise ValueError(btype)
+
+
+# ---------------------------------------------------------------------------
+# shared (weight-tied) attention block — Zamba2
+# ---------------------------------------------------------------------------
+
+def _shared_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    return {
+        "in_proj": dense_init(ks[0], (2 * d, d), cfg.p_dtype),
+        "ln1": norm_init(cfg),
+        "attn": attn_init(ks[1], cfg),
+        "ln2": norm_init(cfg),
+        "mlp": mlp_init(ks[2], cfg),
+        "out_proj": dense_init(ks[3], (d, d), cfg.p_dtype),
+    }
+
+
+def _shared_apply(p, x, x0, cfg, *, cache=None, cache_len=None):
+    u = jnp.concatenate([x, x0], axis=-1) @ p["in_proj"].astype(x.dtype)
+    a, new_attn = attn_apply(
+        p["attn"], norm_apply(p["ln1"], u, cfg), cfg,
+        cache=None if cache is None else cache["attn"], cache_len=cache_len)
+    u = u + a
+    u = u + mlp_apply(p["mlp"], norm_apply(p["ln2"], u, cfg), cfg)
+    y = u @ p["out_proj"].astype(x.dtype)
+    return x + y, None if cache is None else {"attn": new_attn}
+
+
+# ---------------------------------------------------------------------------
+# the LM
+# ---------------------------------------------------------------------------
+
+def _runs(cfg: ModelConfig):
+    """Group layer types into (type, count) runs."""
+    runs = []
+    for t in cfg.layer_types:
+        if runs and runs[-1][0] == t and t != "shared_attn":
+            runs[-1][1] += 1
+        else:
+            runs.append([t, 1])
+    return [(t, c) for t, c in runs]
+
+
+def lm_init(key, cfg: ModelConfig) -> dict:
+    ks = iter(jax.random.split(key, 4 + 2 * len(_runs(cfg))))
+    params: dict[str, Any] = {
+        "embed": {"table": (jax.random.normal(next(ks), (cfg.vocab, cfg.d_model))
+                            * 0.02).astype(cfg.p_dtype)},
+        "final_norm": norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(next(ks), (cfg.d_model, cfg.vocab),
+                                             cfg.p_dtype)}
+    blocks = []
+    for btype, count in _runs(cfg):
+        if btype == "shared_attn":
+            blocks.append({})  # weight-tied; stored once below
+            continue
+        if count > 1 and cfg.use_scan:
+            kk = jax.random.split(next(ks), count)
+            stacked = jax.vmap(lambda k: _block_init(k, btype, cfg))(kk)
+            blocks.append(stacked)
+        else:
+            kk = jax.random.split(next(ks), count)
+            blocks.append([_block_init(k, btype, cfg) for k in kk])
+    params["blocks"] = blocks
+    if "shared_attn" in cfg.layer_types:
+        params["shared"] = _shared_init(next(ks), cfg)
+    return params
+
+
+def lm_forward(
+    params,
+    tokens: Array,
+    cfg: ModelConfig,
+    *,
+    extra_embeds: Array | None = None,
+    cache: list | None = None,
+    cache_len: Array | int | None = None,
+):
+    """tokens [B, S] -> (hidden [B, S', D], new_cache, aux_loss).
+
+    ``extra_embeds`` [B, Sv, D] (vision/audio prefix) is prepended;
+    S' = Sv + S.  ``cache``/``cache_len`` select the decode path.
+    """
+    x = params["embed"]["table"].astype(cfg.act_dtype)[tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cfg.act_dtype), x], axis=1)
+    x = shd.shard(x, "batch", None, "model_embed")
+    x0 = x
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: list | None = None if cache is None else []
+
+    li = 0     # layer index (for cache bookkeeping)
+    for ri, (btype, count) in enumerate(_runs(cfg)):
+        if btype == "shared_attn":
+            x, nc = _shared_apply(
+                params["shared"], x, x0, cfg,
+                cache=None if cache is None else cache[ri],
+                cache_len=cache_len)
+            if new_cache is not None:
+                new_cache.append(nc)
+            li += 1
+            continue
+        bp = params["blocks"][ri]
+        if count > 1 and cfg.use_scan:
+            run_cache = None if cache is None else cache[ri]
+
+            def body(carry, xs):
+                h, aux_acc = carry
+                layer_p, layer_c = xs
+                h, nc, aux = _block_apply(btype, layer_p, h, cfg,
+                                          cache=layer_c, cache_len=cache_len)
+                return (h, aux_acc + aux), nc
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            if run_cache is None:
+                (x, aux_total), _ = jax.lax.scan(
+                    body_fn, (x, aux_total), (bp, None))
+            else:
+                (x, aux_total), nc = jax.lax.scan(
+                    body_fn, (x, aux_total), (bp, run_cache))
+                new_cache.append(nc)
+        else:
+            ncs = []
+
+            def apply_one(p_, x_, cache_=None, cache_len_=None,
+                          _btype=btype):
+                return _block_apply(_btype, p_, x_, cfg, cache=cache_,
+                                    cache_len=cache_len_)
+
+            fn = jax.checkpoint(apply_one) if cfg.remat else apply_one
+            for j in range(count):
+                layer_c = None if cache is None else cache[ri][j]
+                x, nc, aux = fn(bp[j], x, layer_c, cache_len)
+                aux_total = aux_total + aux
+                ncs.append(nc)
+            if new_cache is not None:
+                new_cache.append(ncs)
+        li += count
+
+    x = norm_apply(params["final_norm"], x, cfg)
+    return x, new_cache, aux_total
+
+
+def lm_head_apply(params, hidden: Array, cfg: ModelConfig) -> Array:
+    """hidden [B, S, D] -> logits [B, S, V] (fp32)."""
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(cfg.act_dtype).T
+    else:
+        w = params["lm_head"]["w"].astype(cfg.act_dtype)
+    logits = hidden @ w
+    logits = shd.shard(logits, "batch", None, "vocab")
+    return logits.astype(jnp.float32)
+
+
+def lm_cache_init(cfg: ModelConfig, batch: int, max_seq: int):
+    """Per-run cache pytree matching lm_forward's expectations."""
+    cache = []
+    for btype, count in _runs(cfg):
+        if btype == "shared_attn":
+            cache.append(_block_cache_init("shared_attn", cfg, batch, max_seq))
+        elif count > 1 and cfg.use_scan:
+            one = _block_cache_init(btype, cfg, batch, max_seq)
+            cache.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one))
+        else:
+            cache.append([_block_cache_init(btype, cfg, batch, max_seq)
+                          for _ in range(count)])
+    return cache
+
+
+def embed_hidden(params, hidden: Array, cfg: ModelConfig) -> Array:
+    """Unit-normalized retrieval embedding of final hidden states [B, S, D].
+
+    This is the hook the kNN-LM datastore uses (DESIGN.md §4) — the paper's
+    search subsystem consumes exactly these vectors.
+    """
+    h = hidden.astype(jnp.float32)
+    return h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-12)

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch.
+
+Two execution modes share one math path (``_moe_tokens``):
+
+* **local / auto-sharded** — under ``pjit`` with sharding constraints; the
+  dispatch is gather/scatter along the token axis.  Used on a single device
+  and in unit tests.
+* **manual (shard_map)** — the production path (``moe_apply_sharded``):
+  tokens are device-local (batch sharded over ``pod``/``data``), expert
+  weights are tensor-parallel on ``d_ff`` over ``model``, and the only
+  collective is ONE ``psum`` over ``model`` per layer — the same pattern as
+  a dense TP MLP, so MoE adds no new collective phases.  When
+  ``expert_parallel`` rules are active (n_experts %% TP == 0, e.g.
+  granite-moe's 32 experts), the expert dim shards instead and the dispatch
+  adds an ``all_to_all`` (see ``moe_apply_ep``).
+
+Capacity: each expert takes at most ``C = ceil(T * top_k * cf / E)`` tokens
+(per device shard); overflow tokens fall back to their residual stream
+(standard token-dropping semantics — GShard/Switch).  The router and its
+softmax run in fp32; an auxiliary load-balancing loss is returned.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, m.n_experts
+    ks = jax.random.split(key, 4)
+    glu = cfg.mlp_kind in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "experts": {
+            "up": dense_init(ks[1], (e, d, f), cfg.p_dtype),
+            "down": dense_init(ks[2], (e, f, d), cfg.p_dtype),
+        },
+    }
+    if glu:
+        p["experts"]["gate"] = dense_init(ks[3], (e, d, f), cfg.p_dtype)
+    return p
+
+
+def _capacity(t: int, m: MoEConfig) -> int:
+    return max(1, math.ceil(t * m.top_k * m.capacity_factor / m.n_experts))
+
+
+def _moe_tokens(p, x: Array, cfg: ModelConfig, *, psum_axis=None,
+                no_drop: bool = False):
+    """Core MoE on a flat token batch x: [T, D] -> ([T, D], aux_loss).
+
+    All dispatch ops are plain gathers/scatters on the local token axis.
+    If ``psum_axis`` is given (shard_map mode, d_ff sharded), the expert
+    output partial-sums are reduced over it.
+    """
+    m = cfg.moe
+    T, D = x.shape
+    E, K = m.n_experts, m.top_k
+    # no_drop (decode): capacity == T guarantees zero token drops, so cached
+    # decoding is exactly consistent with teacher forcing.
+    C = T if no_drop else _capacity(T, m)
+
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, K)                            # [T, K]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss (Switch): E * sum_e f_e * p_e --------
+    me = probs.mean(0)                                                  # [E]
+    assign = jnp.zeros((E,), jnp.float32).at[gate_e.reshape(-1)].add(
+        jnp.ones((T * K,), jnp.float32))
+    fe = assign / (T * K)
+    aux = E * jnp.sum(fe * me)
+
+    # ---- sort-based capacity dispatch ---------------------------------
+    flat_e = gate_e.reshape(-1)                                         # [T*K]
+    order = jnp.argsort(flat_e, stable=True)                            # [T*K]
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)                             # [E]
+    seg_start = jnp.cumsum(counts) - counts                             # [E]
+    pos_in_e = jnp.arange(T * K) - seg_start[sorted_e]
+    keep = pos_in_e < C
+    buf_slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)          # overflow -> trash row
+    token_of = order // K                                               # [T*K]
+
+    xbuf = jnp.zeros((E * C + 1, D), x.dtype).at[buf_slot].set(x[token_of])
+    xbuf = xbuf[: E * C].reshape(E, C, D)
+
+    # ---- expert computation (batched over E) ---------------------------
+    up = jnp.einsum("ecd,edf->ecf", xbuf, p["experts"]["up"].astype(x.dtype))
+    if "gate" in p["experts"]:
+        g = jnp.einsum("ecd,edf->ecf", xbuf, p["experts"]["gate"].astype(x.dtype))
+        act = jax.nn.silu(g) if cfg.mlp_kind == "swiglu" else jax.nn.gelu(g)
+        hidden = act * up
+    else:
+        hidden = jax.nn.gelu(up)
+    ybuf = jnp.einsum("ecf,efd->ecd", hidden, p["experts"]["down"].astype(x.dtype))
+    if psum_axis is not None:
+        ybuf = jax.lax.psum(ybuf, psum_axis)                            # TP reduce
+
+    # ---- combine back ---------------------------------------------------
+    yflat = jnp.concatenate([ybuf.reshape(E * C, D),
+                             jnp.zeros((1, D), ybuf.dtype)], 0)
+    contrib = yflat[jnp.where(keep, buf_slot, E * C)]                   # [T*K, D]
+    w = (gate_w.reshape(-1)[order] * keep).astype(contrib.dtype)        # dropped -> 0
+    out = jnp.zeros((T, D), contrib.dtype).at[token_of].add(contrib * w[:, None])
+    return out.astype(x.dtype), aux
+
+
+def moe_apply(p, x: Array, cfg: ModelConfig, *, no_drop: bool = False):
+    """[B, S, D] -> ([B, S, D], aux).  Chooses manual/auto path by context."""
+    B, S, D = x.shape
+    # the manual path assumes expert weights are ffn-TP'd over "model";
+    # under pure-DP rules (expert_ffn unmapped) the auto path is correct
+    if shd.active() and shd.rule("expert_ffn"):
+        mesh = shd.get_mesh()
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_size = math.prod(mesh.shape[a] for a in dp_axes) if dp_axes else 1
+        if B % dp_size == 0:
+            return _moe_sharded(p, x, cfg, no_drop=no_drop)
+        # tiny decode batches (B < DP): tokens replicate; let the auto
+        # partitioner shard the expert einsums on d_ff (shard_map with
+        # unused manual axes trips an XLA SPMD copy bug here)
+    y, aux = _moe_tokens(p, x.reshape(B * S, D), cfg, no_drop=no_drop)
+    return y.reshape(B, S, D), aux
+
+
+def _moe_sharded(p, x: Array, cfg: ModelConfig, *, no_drop: bool = False):
+    """shard_map wrapper: tokens local per (pod, data) shard, d_ff TP."""
+    mesh = shd.get_mesh()
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = ("model",) if "model" in mesh.axis_names else ()
+    manual = set(dp_axes) | set(tp)
+
+    ew_spec = {"up": P(None, None, "model"), "down": P(None, "model", None)}
+    if "gate" in p["experts"]:
+        ew_spec["gate"] = P(None, None, "model")
+    in_specs = (
+        {"router": P(None, None), "experts": ew_spec},
+        P(dp_axes, None, None),
+    )
+
+    def local(p_, x_):
+        B, S, D = x_.shape
+        y, aux = _moe_tokens(p_, x_.reshape(B * S, D), cfg, no_drop=no_drop,
+                             psum_axis="model" if tp else None)
+        if dp_axes:
+            aux = jax.lax.pmean(aux, dp_axes)
+        return y.reshape(B, S, D), aux
+
+    fn = jax.shard_map(
+        local, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(dp_axes, None, None), P()),
+        axis_names=manual, check_vma=False,
+    )
+    return fn(p, x)

@@ -1,0 +1,113 @@
+"""Uniform model interface over the three model kinds (lm / vlm / whisper).
+
+    fns = model_fns(cfg)
+    params = fns.init(key)                       # or jax.eval_shape(fns.init, key)
+    hidden, cache, aux = fns.forward(params, batch)       # train/prefill
+    cache = fns.cache_init(params, batch, max_seq)        # serving
+    hidden, cache = fns.decode_step(params, tokens, cache, cache_len)
+
+``batch`` is a dict: tokens/labels (+ patches | frames for vlm | whisper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as lm_mod
+from repro.models import vlm as vlm_mod
+from repro.models import whisper as wh_mod
+from repro.models.config import ModelConfig
+from repro.configs.shapes import model_kind
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    cfg: ModelConfig
+    kind: str
+    init: Callable[..., Any]
+    forward: Callable[..., Any]          # (params, batch) -> (hidden, cache, aux)
+    cache_init: Callable[..., Any]       # (params, batch, bsz, max_seq) -> cache
+    decode_step: Callable[..., Any]      # (params, tokens, cache, cache_len)
+    lm_head: Callable[..., Any]          # (params, hidden) -> logits
+    loss_offset: Callable[[dict], int]   # #prefix positions excluded from loss
+
+
+def model_fns(cfg: ModelConfig) -> ModelFns:
+    kind = model_kind(cfg)
+
+    if kind == "lm":
+        def fwd(params, batch):
+            return lm_mod.lm_forward(params, batch["tokens"], cfg)
+
+        def cache_init(params, batch, bsz, max_seq):
+            return lm_mod.lm_cache_init(cfg, bsz, max_seq)
+
+        def decode(params, tokens, cache, cache_len):
+            h, nc, _ = lm_mod.lm_forward(params, tokens, cfg, cache=cache,
+                                         cache_len=cache_len)
+            return h, nc
+
+        return ModelFns(cfg, kind, lambda k: lm_mod.lm_init(k, cfg), fwd,
+                        cache_init, decode,
+                        lambda p, h: lm_mod.lm_head_apply(p, h, cfg),
+                        lambda batch: 0)
+
+    if kind == "vlm":
+        def fwd(params, batch):
+            return vlm_mod.vlm_forward(params, batch["patches"],
+                                       batch["tokens"], cfg)
+
+        def cache_init(params, batch, bsz, max_seq):
+            return lm_mod.lm_cache_init(cfg, bsz, max_seq)
+
+        def decode(params, tokens, cache, cache_len):
+            h, nc, _ = lm_mod.lm_forward(params, tokens, cfg, cache=cache,
+                                         cache_len=cache_len)
+            return h, nc
+
+        return ModelFns(cfg, kind, lambda k: vlm_mod.vlm_init(k, cfg), fwd,
+                        cache_init, decode,
+                        lambda p, h: lm_mod.lm_head_apply(p, h, cfg),
+                        lambda batch: cfg.vision_seq)
+
+    if kind == "whisper":
+        def fwd(params, batch):
+            return wh_mod.whisper_forward(params, batch["frames"],
+                                          batch["tokens"], cfg)
+
+        def cache_init(params, batch, bsz, max_seq):
+            return wh_mod.whisper_cache_init(params, batch["frames"], cfg,
+                                             bsz, max_seq)
+
+        def decode(params, tokens, cache, cache_len):
+            return wh_mod.whisper_decode_step(params, tokens, cfg, cache,
+                                              cache_len)
+
+        return ModelFns(cfg, kind, lambda k: wh_mod.whisper_init(k, cfg), fwd,
+                        cache_init, decode,
+                        lambda p, h: lm_mod.lm_head_apply(p, h, cfg),
+                        lambda batch: 0)
+
+    raise ValueError(kind)
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Concrete random batch matching input_specs (for smoke tests)."""
+    from repro.models.vlm import VIT_WIDTH
+    kind = model_kind(cfg)
+    k = jax.random.PRNGKey(seed)
+    kt, kl, kf = jax.random.split(k, 3)
+    out = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(kl, (batch, seq), 0, cfg.vocab, jnp.int32),
+    }
+    if kind == "vlm":
+        out["patches"] = jax.random.normal(kf, (batch, cfg.vision_seq, VIT_WIDTH),
+                                           jnp.float32).astype(jnp.bfloat16)
+    if kind == "whisper":
+        out["frames"] = jax.random.normal(kf, (batch, cfg.encoder_seq, cfg.d_model),
+                                          jnp.float32).astype(jnp.bfloat16)
+    return out

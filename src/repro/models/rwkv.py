@@ -1,0 +1,230 @@
+"""RWKV-6 ("Finch") block: data-dependent decay linear attention.
+
+Per head (key/value dim M = d_model / n_heads), with data-dependent
+per-channel decay w_t in (0,1) and bonus u:
+
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T            S: [M, M]
+
+Token-shift mixing and the low-rank (LoRA) data-dependent interpolation
+follow arXiv:2404.05892.  The sequential path is a ``lax.scan`` over time;
+``rwkv6_chunked`` is the O(S/Q) chunked form used for long sequences
+(identical output, tested) — the TPU-friendly variant with matmul-dominated
+inner loops.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, norm_init, norm_apply
+
+LORA_R = 32     # decay LoRA rank
+MIX_R = 32      # token-shift mix LoRA rank
+
+
+def _n_heads(cfg: ModelConfig):
+    return cfg.n_heads
+
+
+def _head_norm(p, x: Array, h: int) -> Array:
+    """Per-head RMS normalization (RWKV's GroupNorm(n_heads), scale-only).
+
+    Head-local: no cross-head reduction, so a head-sharded layout flows
+    through without collectives (EXPERIMENTS.md §Perf.P2).
+    """
+    B, S, D = x.shape
+    m = D // h
+    xf = x.astype(jnp.float32).reshape(B, S, h, m)
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + 1e-6)
+    y = y * p["scale"].astype(jnp.float32).reshape(h, m)
+    return y.reshape(B, S, D).astype(x.dtype)
+
+
+def rwkv6_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = _n_heads(cfg)
+    m = d // h
+    ks = jax.random.split(key, 16)
+    p = {
+        # token-shift static mixes (5 for time-mix: r,k,v,g,w)
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(cfg.p_dtype),
+        "mix_w1": dense_init(ks[1], (d, 5 * MIX_R), cfg.p_dtype),
+        "mix_w2": dense_init(ks[2], (5, MIX_R, d), cfg.p_dtype, scale=0.01),
+        "wr": dense_init(ks[3], (d, d), cfg.p_dtype),
+        "wk": dense_init(ks[4], (d, d), cfg.p_dtype),
+        "wv": dense_init(ks[5], (d, d), cfg.p_dtype),
+        "wg": dense_init(ks[6], (d, d), cfg.p_dtype),
+        "wo": dense_init(ks[7], (d, d), cfg.p_dtype, scale=1.0 / math.sqrt(d)),
+        # decay: w = exp(-exp(w0 + lora(xw)))
+        "w0": (jax.random.uniform(ks[8], (d,)) * 2.0 - 6.0).astype(jnp.float32),
+        "decay_w1": dense_init(ks[9], (d, LORA_R), cfg.p_dtype),
+        "decay_w2": dense_init(ks[10], (LORA_R, d), cfg.p_dtype, scale=0.01),
+        "u": (jax.random.uniform(ks[11], (h, m)) - 0.5).astype(jnp.float32),
+        "ln_x": norm_init(cfg, d),   # per-head group norm approximated by LN
+        # channel-mix
+        "cm_mu": (jax.random.uniform(ks[12], (2, d)) * 0.5 + 0.25).astype(cfg.p_dtype),
+        "cm_k": dense_init(ks[13], (d, cfg.d_ff), cfg.p_dtype),
+        "cm_v": dense_init(ks[14], (cfg.d_ff, d), cfg.p_dtype),
+        "cm_r": dense_init(ks[15], (d, d), cfg.p_dtype),
+        # pre-norms for the two sub-blocks
+        "ln1": norm_init(cfg, d),
+        "ln2": norm_init(cfg, d),
+    }
+    return p
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Sequential recurrence.  r,k,v: [B,S,H,M]; w: [B,S,H,M] decay in (0,1);
+    u: [H,M]; state: [B,H,M,M] (key dim first).  Returns (out, new_state)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                # [B,H,M] each
+        kv = kt[..., :, None] * vt[..., None, :]            # [B,H,M,M]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(out, 0, 1), state                   # [B,S,H,M]
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int = 64):
+    """Chunked equivalent of :func:`_wkv_scan` (matmul-dominated).
+
+    Within a chunk of length Q: decay products D_t = prod_{i<=t} w_i let the
+    intra-chunk term become a masked (r D_t / D_j) k_j^T matmul; the carried
+    state contributes r_t D_t S.  fp32 throughout; w is clamped away from 0.
+    """
+    B, S, H, M = r.shape
+    pad = (-S) % chunk
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    L = r.shape[1] // chunk
+    rc = jnp.moveaxis(r.reshape(B, L, chunk, H, M), 1, 0).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(B, L, chunk, H, M), 1, 0).astype(jnp.float32)
+    vc = jnp.moveaxis(v.reshape(B, L, chunk, H, M), 1, 0).astype(jnp.float32)
+    wc = jnp.moveaxis(w.reshape(B, L, chunk, H, M), 1, 0).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # strict lower
+
+    def step(s, inp):
+        rq, kq, vq, wq = inp                                # [B,Q,H,M]
+        logw = jnp.log(jnp.clip(wq, 1e-6, 1.0))
+        cum = jnp.cumsum(logw, axis=1)                      # log D_t (incl. t)
+        # intra-chunk (j < t): A[t,j] = r_t . (D_{t-1} / D_j) k_j
+        r_d = rq * jnp.exp(cum - logw)                      # r_t D_{t-1}
+        k_d = kq * jnp.exp(-cum)                            # k_j / D_j
+        att = jnp.einsum("bqhm,bjhm->bhqj", r_d, k_d)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y = jnp.einsum("bhqj,bjhm->bqhm", att, vq)
+        # bonus diagonal: u * (r_t . k_t) v_t
+        y = y + jnp.einsum("bqhm,bqhm->bqh", rq, u[None, None] * kq)[..., None] * vq
+        # carried state: r_t D_{t-1}... state is pre-chunk S
+        y = y + jnp.einsum("bqhk,bhkv->bqhv", r_d, s)
+        # new state: S' = D_Q S + sum_j (D_Q/D_j) k_j v_j
+        k_end = kq * jnp.exp(cum[:, -1:] - cum)
+        s = s * jnp.exp(cum[:, -1])[..., None] + jnp.einsum(
+            "bjhk,bjhv->bhkv", k_end, vq)
+        return s, y
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (rc, kc, vc, wc))
+    out = jnp.moveaxis(ys, 0, 1).reshape(B, -1, H, M)[:, :S]
+    return out, state
+
+
+def rwkv6_apply(p, x: Array, cfg: ModelConfig, *, cache: dict | None = None,
+                chunked: bool | None = None):
+    """Time-mix + channel-mix (residuals internal).  x: [B,S,D] -> (y, cache).
+
+    The returned y is the full block output — the LM wrapper must NOT add
+    another residual around this block.
+    """
+    B, S, D = x.shape
+    h = _n_heads(cfg)
+    m = D // h
+    if chunked is None:
+        chunked = S >= 256
+
+    # ---- time-mix ------------------------------------------------------
+    xin = norm_apply(p["ln1"], x, cfg)
+    last_tm = cache["shift_tm"].astype(xin.dtype) if cache else jnp.zeros((B, 1, D), xin.dtype)
+    sx = jnp.concatenate([last_tm, xin[:, :-1]], axis=1) - xin  # shifted minus x
+    base = xin + sx * p["mu"][0].astype(xin.dtype)
+    lora = jnp.tanh(base @ p["mix_w1"].astype(xin.dtype))   # [B,S,5R]
+    lora = lora.reshape(B, S, 5, MIX_R)
+    # per-branch deltas: computing the five [B,S,D] mixes one at a time keeps
+    # the peak intermediate at 1x activation size — the fused
+    # einsum('bstr,trd->bstd') materialized a 5*D tensor that dominated both
+    # HBM traffic and the TP collectives (§Perf.P2, -2.5 GiB x4 per layer).
+    w2 = p["mix_w2"].astype(xin.dtype)                      # [5, R, D]
+    mu = p["mu"].astype(xin.dtype)                          # [5, D]
+
+    def _mix(i):
+        delta = lora[:, :, i] @ w2[i]                       # [B,S,D]
+        return xin + sx * (mu[i] + delta)
+
+    xr, xk, xv, xg, xw = (_mix(i) for i in range(5))
+
+    # head-sharded token mixer: r/k/v/w/out all stay sharded on the head
+    # axis (wr/wk/wv outputs are TP-sharded); the per-head norm keeps it so,
+    # and the single psum hides inside the wo projection (input-sharded).
+    hs = lambda t: shd.shard(t, "batch", None, "heads", None)
+    r = hs((xr @ p["wr"].astype(x.dtype)).reshape(B, S, h, m))
+    k = hs((xk @ p["wk"].astype(x.dtype)).reshape(B, S, h, m))
+    v = hs((xv @ p["wv"].astype(x.dtype)).reshape(B, S, h, m))
+    g = shd.shard(jax.nn.silu(xg @ p["wg"].astype(x.dtype)), "batch", None, "ffn")
+    dec = p["w0"] + (jnp.tanh(xw @ p["decay_w1"].astype(x.dtype))
+                     @ p["decay_w2"].astype(x.dtype)).astype(jnp.float32)
+    w = hs(jnp.exp(-jnp.exp(dec)).reshape(B, S, h, m))      # (0,1)
+
+    state = (cache["wkv_state"] if cache
+             else jnp.zeros((B, h, m, m), jnp.float32))
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if chunked and S > 1:
+        out, new_state = _wkv_chunked(rf, kf, vf, w, p["u"], state)
+    else:
+        out, new_state = _wkv_scan(rf, kf, vf, w, p["u"], state)
+    out = _head_norm(p["ln_x"], out.reshape(B, S, D), h).astype(x.dtype) * g
+    out = shd.shard(out, "batch", None, "ffn")
+    y_tm = out @ p["wo"].astype(x.dtype)
+    y_tm = shd.shard(y_tm, "batch", None, "model_embed")
+    x = x + y_tm
+
+    # ---- channel-mix ---------------------------------------------------
+    xc = norm_apply(p["ln2"], x, cfg)
+    last_cm = cache["shift_cm"].astype(xc.dtype) if cache else jnp.zeros((B, 1, D), xc.dtype)
+    sx2 = jnp.concatenate([last_cm, xc[:, :-1]], axis=1) - xc
+    xk2 = xc + sx2 * p["cm_mu"][0].astype(xc.dtype)
+    xr2 = xc + sx2 * p["cm_mu"][1].astype(xc.dtype)
+    kk = jnp.square(jax.nn.relu(xk2 @ p["cm_k"].astype(x.dtype)))
+    kk = shd.shard(kk, "batch", None, "ffn")
+    cmix = jax.nn.sigmoid(xr2 @ p["cm_r"].astype(x.dtype)) * (
+        kk @ p["cm_v"].astype(x.dtype))
+    y = x + shd.shard(cmix, "batch", None, "model_embed")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "shift_tm": xin[:, -1:],   # last time-mix INPUT token
+            "shift_cm": xc[:, -1:],    # last channel-mix INPUT token
+            "wkv_state": new_state,
+        }
+    return y, new_cache
+
+
+def rwkv6_cache_init(cfg: ModelConfig, batch: int):
+    d, h = cfg.d_model, _n_heads(cfg)
+    m = d // h
+    return {
+        "shift_tm": jnp.zeros((batch, 1, d), cfg.act_dtype),
+        "shift_cm": jnp.zeros((batch, 1, d), cfg.act_dtype),
+        "wkv_state": jnp.zeros((batch, h, m, m), jnp.float32),
+    }

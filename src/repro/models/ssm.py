@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD) block — chunked scan formulation (arXiv:2405.21060).
+
+State-space recurrence per head (state N, head dim P):
+
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t x_t^T        h: [N, P]
+    y_t = C_t h_t + D x_t
+
+computed with the SSD chunk decomposition: intra-chunk quadratic term
+(attention-like, MXU-friendly) + inter-chunk recurrence over chunk states
+via ``lax.scan``.  Parallel/train path and single-token decode path share
+parameters; decode carries ``{"ssm_state": [B,H,N,P], "conv_state": ...}``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import sharding as shd
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.layers import dense_init, norm_init, norm_apply
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    return s, d_in, n_heads, conv_dim
+
+
+def mamba2_init(key, cfg: ModelConfig):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.state_dim + nh  # z, x, B, C, dt
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,)) *
+                 (math.log(s.dt_max) - math.log(s.dt_min)) + math.log(s.dt_min))
+    p = {
+        "in_proj": dense_init(ks[0], (d, proj_out), cfg.p_dtype),
+        "out_proj": dense_init(ks[1], (d_in, d), cfg.p_dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": dense_init(ks[3], (s.conv_width, conv_dim), cfg.p_dtype,
+                             scale=1.0 / math.sqrt(s.conv_width)),
+        "conv_b": jnp.zeros((conv_dim,), cfg.p_dtype),
+        "gate_norm": norm_init(cfg, d_in),
+    }
+    return p
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Array | None):
+    """Depthwise causal conv1d.  x: [B, S, C], w: [W, C] -> [B, S, C].
+
+    ``state``: [B, W-1, C] carries the tail for decode; returns new state.
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # [B, S+W-1, C]
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return out + b.astype(x.dtype), new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD scan.  x:[b,s,h,p] dt:[b,s,h] A:[h] B,C:[b,s,g,n] -> y:[b,s,h,p].
+
+    fp32 state math; returns (y, final_state [b,h,n,p]).
+    """
+    b, s_len, h, p_dim = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s_len) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1] // chunk
+    # scan over chunks: all quadratic intermediates stay one-chunk sized
+    # ([b, q, q, h] etc.), so memory is O(chunk^2) regardless of S.
+    xc = jnp.moveaxis(x.reshape(b, L, chunk, h, p_dim), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, L, chunk, h), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(b, L, chunk, g, n), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(b, L, chunk, g, n), 1, 0)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inp):
+        xq, dtq, Bq, Cq = inp                               # per-chunk slices
+        xq = xq.astype(jnp.float32)
+        dtq = dtq.astype(jnp.float32)
+        Bq = jnp.repeat(Bq, rep, axis=2).astype(jnp.float32)   # [b,q,h,n]
+        Cq = jnp.repeat(Cq, rep, axis=2).astype(jnp.float32)
+        dA = dtq * A[None, None, :]                         # [b,q,h] (negative)
+        cum = jnp.cumsum(dA, axis=1)
+        # intra: y[t] = sum_{j<=t} exp(a_t - a_j) (C_t . B_j) dt_j x_j
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [b,q,j,h]
+        decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+        CB = jnp.einsum("bqhn,bjhn->bqjh", Cq, Bq)
+        y_intra = jnp.einsum("bqjh,bjhp->bqhp", CB * decay * dtq[:, None], xq)
+        # inter: y += C_t exp(a_t) H_prev
+        y_inter = jnp.einsum("bqhn,bqh,bhnp->bqhp", Cq, jnp.exp(cum), carry)
+        # new chunk state
+        seg = jnp.exp(cum[:, -1:, :] - cum) * dtq           # [b,q,h]
+        state = jnp.einsum("bqh,bqhn,bqhp->bhnp", seg, Bq, xq)
+        new = carry * jnp.exp(cum[:, -1])[..., None, None] + state
+        return new, y_intra + y_inter
+
+    init = (jnp.zeros((b, h, n, p_dim), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(step, init, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, -1, h, p_dim)[:, :s_len]
+    return y, final
+
+
+def mamba2_apply(p, x: Array, cfg: ModelConfig, *, cache: dict | None = None):
+    """x: [B, S, D].  Train/prefill when cache is None; else one-step decode.
+
+    Returns (y, new_cache).
+    """
+    s, d_in, nh, conv_dim = _dims(cfg)
+    B_, S_, D_ = x.shape
+    proj = x @ p["in_proj"].astype(x.dtype)                 # [B,S,*]
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.n_groups * s.state_dim,
+               2 * d_in + 2 * s.n_groups * s.state_dim], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = cache.get("conv_state") if cache else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :d_in]
+    Bc = conv_out[..., d_in : d_in + s.n_groups * s.state_dim]
+    Cc = conv_out[..., d_in + s.n_groups * s.state_dim :]
+
+    heads_x = xin.reshape(B_, S_, nh, s.head_dim)
+    Bh = Bc.reshape(B_, S_, s.n_groups, s.state_dim)
+    Ch = Cc.reshape(B_, S_, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # [B,S,nh]
+    A = -jnp.exp(p["A_log"])                                           # [nh]
+
+    if cache is None:
+        heads_x = shd.shard(heads_x, "batch", None, "heads", None)
+        y, final = _ssd_chunked(heads_x, dt, A, Bh, Ch, s.chunk)
+        new_state = final
+    elif S_ > 4:
+        # cache-filling prefill: chunked path from the carried state
+        y, new_state = _ssd_chunked(heads_x, dt, A, Bh, Ch, s.chunk,
+                                    init_state=cache["ssm_state"])
+    else:
+        # recurrent single (or few) token update
+        st = cache["ssm_state"].astype(jnp.float32)         # [B,nh,N,P]
+        rep = nh // s.n_groups
+        Bh_ = jnp.repeat(Bh, rep, axis=2).astype(jnp.float32)
+        Ch_ = jnp.repeat(Ch, rep, axis=2).astype(jnp.float32)
+        xf = heads_x.astype(jnp.float32)
+        ys = []
+        for t in range(S_):                                 # S_ is 1 in decode
+            dA = jnp.exp(dt[:, t] * A[None, :])             # [B,nh]
+            st = st * dA[..., None, None] + jnp.einsum(
+                "bhn,bhp,bh->bhnp", Bh_[:, t], xf[:, t], dt[:, t])
+            ys.append(jnp.einsum("bhn,bhnp->bhp", Ch_[:, t], st))
+        y = jnp.stack(ys, axis=1)                           # [B,S,nh,P]
+        new_state = st
+
+    y = y + xf_d(heads_x) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S_, d_in).astype(x.dtype)
+    y = norm_apply(p["gate_norm"], y * jax.nn.silu(z), cfg)
+    out = y @ p["out_proj"].astype(x.dtype)
+    out = shd.shard(out, "batch", None, "model_embed")
+    new_cache = {"ssm_state": new_state, "conv_state": new_conv} if (
+        cache is not None) else None
+    return out, new_cache
+
+
+def xf_d(h):
+    return h.astype(jnp.float32)
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "ssm_state": jnp.zeros((batch, nh, s.state_dim, s.head_dim), jnp.float32),
+        "conv_state": jnp.zeros((batch, s.conv_width - 1, conv_dim), jnp.float32),
+    }

@@ -1,0 +1,45 @@
+"""InternVL2-style VLM backbone (vision frontend is a STUB).
+
+Per the assignment the ViT is not modeled: ``input_specs`` provides
+precomputed patch embeddings [B, n_patches, D_vit].  What is real here is
+the InternVL "connector": pixel-shuffle-equivalent MLP projector from the
+ViT width into the LM's d_model, followed by the full language model with
+the vision tokens prepended (loss is masked to text positions by the
+trainer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, norm_init, norm_apply
+from repro.models.lm import lm_forward, lm_init
+
+VIT_WIDTH = 1024   # InternViT-300M output width (stub frontend)
+
+
+def vlm_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = lm_init(k1, cfg)
+    params["projector"] = {
+        "ln": norm_init(cfg, VIT_WIDTH),
+        "w1": dense_init(k2, (VIT_WIDTH, cfg.d_model), cfg.p_dtype),
+        "w2": dense_init(k3, (cfg.d_model, cfg.d_model), cfg.p_dtype),
+    }
+    return params
+
+
+def project_patches(params, patches: Array, cfg: ModelConfig) -> Array:
+    """[B, Sv, VIT_WIDTH] -> [B, Sv, d_model]."""
+    h = norm_apply(params["projector"]["ln"], patches.astype(cfg.act_dtype), cfg)
+    h = jax.nn.gelu(h @ params["projector"]["w1"].astype(h.dtype))
+    return h @ params["projector"]["w2"].astype(h.dtype)
+
+
+def vlm_forward(params, patches: Array, tokens: Array, cfg: ModelConfig,
+                **kw):
+    """-> (hidden [B, Sv+St, D], cache, aux)."""
+    vis = project_patches(params, patches, cfg)
+    return lm_forward(params, tokens, cfg, extra_embeds=vis, **kw)

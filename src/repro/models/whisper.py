@@ -1,0 +1,165 @@
+"""Whisper-style encoder–decoder backbone (audio frontend is a STUB).
+
+Per the assignment, the conv/mel frontend is not modeled: ``input_specs``
+provides precomputed frame embeddings [B, n_frames, D] (n_frames = 1500 for
+whisper-small's 30 s window).  The transformer backbone is real:
+
+  encoder: bidirectional attention blocks over frames
+  decoder: causal self-attention + cross-attention to encoder output + MLP
+
+Decode shapes lower the decoder step with a self-attn KV cache plus the
+precomputed cross-attention K/V (computed once from the encoder output at
+prefill, reused every step — the standard enc-dec serving layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models.layers import (attn_apply, attn_init, mlp_apply, mlp_init,
+                                 norm_apply, norm_init)
+from repro.models.lm import lm_head_apply  # shared head
+
+
+def whisper_init(key, cfg: ModelConfig) -> dict:
+    ks = iter(jax.random.split(key, 6))
+    enc_layer = lambda k: {
+        "ln1": norm_init(cfg), "attn": attn_init(jax.random.fold_in(k, 0), cfg),
+        "ln2": norm_init(cfg), "mlp": mlp_init(jax.random.fold_in(k, 1), cfg),
+    }
+    dec_layer = lambda k: {
+        "ln1": norm_init(cfg), "self": attn_init(jax.random.fold_in(k, 0), cfg),
+        "ln2": norm_init(cfg), "cross": attn_init(jax.random.fold_in(k, 1), cfg),
+        "ln3": norm_init(cfg), "mlp": mlp_init(jax.random.fold_in(k, 2), cfg),
+    }
+    enc_keys = jax.random.split(next(ks), cfg.encoder_layers)
+    dec_keys = jax.random.split(next(ks), cfg.n_layers)
+    params = {
+        "embed": {"table": (jax.random.normal(next(ks), (cfg.vocab, cfg.d_model))
+                            * 0.02).astype(cfg.p_dtype)},
+        "enc": (jax.vmap(enc_layer)(enc_keys) if cfg.use_scan
+                else [enc_layer(k) for k in enc_keys]),
+        "dec": (jax.vmap(dec_layer)(dec_keys) if cfg.use_scan
+                else [dec_layer(k) for k in dec_keys]),
+        "enc_norm": norm_init(cfg),
+        "final_norm": norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        from repro.models.layers import dense_init
+        params["lm_head"] = {"w": dense_init(next(ks), (cfg.d_model, cfg.vocab),
+                                             cfg.p_dtype)}
+    return params
+
+
+def _enc_block(p, x, cfg):
+    a, _ = attn_apply(p["attn"], norm_apply(p["ln1"], x, cfg), cfg, causal=False)
+    x = x + a
+    return x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x, cfg), cfg)
+
+
+def _dec_block(p, x, enc_kv, cfg, cache=None, cache_len=None):
+    a, new_self = attn_apply(
+        p["self"], norm_apply(p["ln1"], x, cfg), cfg,
+        cache=None if cache is None else cache["self"], cache_len=cache_len)
+    x = x + a
+    c, _ = attn_apply(
+        p["cross"], norm_apply(p["ln2"], x, cfg), cfg,
+        kv_override=enc_kv, causal=False, cache_len=cache_len)
+    x = x + c
+    x = x + mlp_apply(p["mlp"], norm_apply(p["ln3"], x, cfg), cfg)
+    return x, None if cache is None else {"self": new_self}
+
+
+def _cross_kv(p, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output for one layer."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(enc_out.dtype))
+    if "bk" in p["cross"]:
+        k = k + p["cross"]["bk"].astype(enc_out.dtype)
+        v = v + p["cross"]["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def encode(params, frames: Array, cfg: ModelConfig) -> Array:
+    """frames [B, Se, D] -> encoder output [B, Se, D]."""
+    x = shd.shard(frames.astype(cfg.act_dtype), "batch", None, "model_embed")
+    if cfg.use_scan:
+        def body(h, lp):
+            return _enc_block(lp, h, cfg), None
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["enc"])
+    else:
+        for lp in params["enc"]:
+            x = _enc_block(lp, x, cfg)
+    return norm_apply(params["enc_norm"], x, cfg)
+
+
+def whisper_forward(params, frames: Array, tokens: Array, cfg: ModelConfig):
+    """Teacher-forced training pass -> (hidden [B, St, D], None, aux=0)."""
+    enc_out = encode(params, frames, cfg)
+    x = params["embed"]["table"].astype(cfg.act_dtype)[tokens]
+    x = shd.shard(x, "batch", None, "model_embed")
+    if cfg.use_scan:
+        def body(h, lp):
+            kv = _cross_kv(lp, enc_out, cfg)
+            h, _ = _dec_block(lp, h, kv, cfg)
+            return h, None
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["dec"])
+    else:
+        for lp in params["dec"]:
+            kv = _cross_kv(lp, enc_out, cfg)
+            x, _ = _dec_block(lp, x, kv, cfg)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return x, None, jnp.zeros((), jnp.float32)
+
+
+def whisper_cache_init(params, frames: Array, cfg: ModelConfig, batch: int,
+                       max_seq: int):
+    """Run the encoder once; build {self-attn cache, cross K/V} per layer."""
+    enc_out = encode(params, frames, cfg)
+    kv, dh = cfg.n_kv_heads * cfg.kv_repeat, cfg.head_dim
+
+    def per_layer(lp):
+        ck, cv = _cross_kv(lp, enc_out, cfg)
+        return {
+            "self": {
+                "k": jnp.zeros((batch, max_seq, kv, dh), cfg.act_dtype),
+                "v": jnp.zeros((batch, max_seq, kv, dh), cfg.act_dtype),
+            },
+            "cross_k": ck, "cross_v": cv,
+        }
+
+    if cfg.use_scan:
+        return jax.vmap(per_layer)(params["dec"])
+    return [per_layer(lp) for lp in params["dec"]]
+
+
+def whisper_decode_step(params, tokens: Array, cfg: ModelConfig, cache,
+                        cache_len):
+    """tokens [B, 1] -> (hidden [B, 1, D], new_cache)."""
+    x = params["embed"]["table"].astype(cfg.act_dtype)[tokens]
+
+    def one(lp, h, lc):
+        kv = (lc["cross_k"], lc["cross_v"])
+        h, nc = _dec_block(lp, h, kv, cfg, cache=lc, cache_len=cache_len)
+        new_lc = dict(lc)
+        new_lc["self"] = nc["self"]
+        return h, new_lc
+
+    if cfg.use_scan:
+        def body(h, xs):
+            lp, lc = xs
+            h, new_lc = one(lp, h, lc)
+            return h, new_lc
+        x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+    else:
+        new_cache = []
+        for lp, lc in zip(params["dec"], cache):
+            x, new_lc = one(lp, x, lc)
+            new_cache.append(new_lc)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return x, new_cache

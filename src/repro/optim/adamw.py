@@ -1,0 +1,83 @@
+"""Sharded AdamW with decoupled weight decay, global-norm clipping.
+
+Functional: ``init(params) -> state``; ``update(grads, state, params, lr)
+-> (params, state, metrics)``.  Optimizer moments inherit the parameter
+sharding (they are tree-mapped from params), so FSDP rules shard them too.
+Master weights are fp32; bf16 params are supported by casting on apply.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # parameters whose path matches any of these fragments get NO decay
+    no_decay: tuple[str, ...] = ("scale", "bias", "norm", "dt_bias", "A_log",
+                                 "D", "w0", "u", "mu")
+
+
+def _decay_mask(params, cfg: AdamWConfig):
+    def leaf(path, _):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        return not any(frag in name for frag in cfg.no_decay)
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig()):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    decay = _decay_mask(params, cfg)
+
+    def upd(g, m, v, p, dec):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + jnp.where(dec, cfg.weight_decay, 0.0) * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_d = tdef.flatten_up_to(decay)
+    out = [upd(g, m, v, p, d) for g, m, v, p, d in
+           zip(flat_g, flat_m, flat_v, flat_p, flat_d)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,21 @@
+"""LR schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / max(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                     (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full((), peak_lr, jnp.float32)

@@ -1,0 +1,86 @@
+"""Serving engine: batched prefill + KV-cache decode, optional kNN-LM.
+
+``prefill`` runs the model over the prompt tokens through the cache-filling
+path (attention writes K/V as it goes; SSM/RWKV states carry forward), so a
+following ``decode`` continues exactly.  Sampling is greedy or temperature;
+the kNN-LM hook (the paper's technique in the serving layer) interpolates
+next-token distributions with datastore neighbors — see
+:mod:`repro.serve.knnlm`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import embed_hidden, lm_forward
+from repro.models.registry import ModelFns
+
+
+class Engine:
+    def __init__(self, fns: ModelFns, params, *, max_seq: int,
+                 knn: "Any | None" = None, lmbda: float = 0.25):
+        self.fns = fns
+        self.params = params
+        self.cfg = fns.cfg
+        self.max_seq = max_seq
+        self.knn = knn
+        self.lmbda = lmbda
+        self._decode_jit = jax.jit(self._decode_step)
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, batch: dict):
+        """Prompt batch -> (cache, cache_len, last_hidden [B, D])."""
+        bsz = batch["tokens"].shape[0]
+        cache = self.fns.cache_init(self.params, batch, bsz, self.max_seq)
+        if self.fns.kind == "whisper":
+            # encoder ran inside cache_init (cross K/V); feed decoder prompt
+            hidden, cache = self.fns.decode_step(
+                self.params, batch["tokens"], cache, jnp.int32(0))
+        else:
+            toks = batch["tokens"]
+            if self.fns.kind == "vlm":
+                from repro.models.vlm import project_patches
+                vis = project_patches(self.params, batch["patches"], self.cfg)
+                # vision prefix + prompt go through the cache path together
+                hidden, cache, _ = lm_forward(
+                    self.params, toks, self.cfg, extra_embeds=vis,
+                    cache=cache, cache_len=jnp.int32(0))
+                cache_len = jnp.int32(vis.shape[1] + toks.shape[1])
+                return cache, cache_len, hidden[:, -1]
+            hidden, cache = self.fns.decode_step(
+                self.params, toks, cache, jnp.int32(0))
+        cache_len = jnp.int32(batch["tokens"].shape[1])
+        return cache, cache_len, hidden[:, -1]
+
+    # --------------------------------------------------------------- decode
+    def _decode_step(self, params, tokens, cache, cache_len):
+        hidden, cache = self.fns.decode_step(params, tokens, cache, cache_len)
+        logits = self.fns.lm_head(params, hidden)[:, -1]     # [B, V]
+        return hidden[:, -1], logits, cache
+
+    def decode(self, cache, cache_len, first_tokens, n_steps: int, *,
+               temperature: float = 0.0, seed: int = 0):
+        """Greedy/temperature decode.  Returns (tokens [B, n], new_cache)."""
+        toks = first_tokens
+        out = []
+        key = jax.random.PRNGKey(seed)
+        for i in range(n_steps):
+            hidden, logits, cache = self._decode_jit(
+                self.params, toks, cache, cache_len)
+            probs = jax.nn.softmax(logits, axis=-1)
+            if self.knn is not None:
+                probs = self.knn.interpolate(hidden, probs, self.lmbda)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, jnp.log(jnp.maximum(probs, 1e-20)) / temperature)
+            else:
+                nxt = jnp.argmax(probs, axis=-1)
+            toks = nxt[:, None].astype(jnp.int32)
+            out.append(toks)
+            cache_len = cache_len + 1
+        return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,80 @@
+"""kNN-LM (Khandelwal et al., ICLR 2020) on the paper's exact search.
+
+Datastore: (unit-normalized final hidden state h_t  ->  next token w_{t+1})
+pairs harvested from a corpus pass.  At decode, the current hidden state
+queries the datastore for its exact top-k cosine neighbors (block-pruned
+search — LSH/IVF recall loss is exactly what the paper's bounds remove),
+turns neighbor similarities into a distribution with a temperature softmax,
+and interpolates:  p = (1-λ) p_LM + λ p_kNN.
+
+The datastore can be mesh-sharded (`repro.core.distributed`) — per-shard
+search + tiny top-k merge collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import BlockIndex, build_index, search
+from repro.kernels import ops as kops
+from repro.models.lm import embed_hidden
+
+
+class KNNDatastore:
+    def __init__(self, index: BlockIndex, values: jnp.ndarray, vocab: int,
+                 *, k: int = 16, temp: float = 10.0, use_kernel: bool = False):
+        self.index = index
+        self.values = values            # [n] int32 next-token ids
+        self.vocab = vocab
+        self.k = k
+        self.temp = temp
+        self.use_kernel = use_kernel
+
+    # ------------------------------------------------------------ building
+    @classmethod
+    def from_pairs(cls, embeddings: np.ndarray, next_tokens: np.ndarray,
+                   vocab: int, *, n_pivots: int = 16, block_size: int = 128,
+                   **kw) -> "KNNDatastore":
+        idx = build_index(jnp.asarray(embeddings, jnp.float32),
+                          n_pivots=n_pivots, block_size=block_size)
+        return cls(idx, jnp.asarray(next_tokens, jnp.int32), vocab, **kw)
+
+    @classmethod
+    def from_corpus(cls, fns, params, batches, vocab: int, **kw):
+        """Harvest (hidden -> next token) pairs with the model itself."""
+        embs, nxt = [], []
+        for batch in batches:
+            hidden, _, _ = fns.forward(params, batch)
+            off = fns.loss_offset(batch)
+            h = embed_hidden(params, hidden[:, off:], fns.cfg)
+            embs.append(np.asarray(h[:, :-1].reshape(-1, h.shape[-1])))
+            nxt.append(np.asarray(batch["tokens"][:, 1:]).reshape(-1))
+        return cls.from_pairs(np.concatenate(embs), np.concatenate(nxt),
+                              vocab, **kw)
+
+    # ----------------------------------------------------------- inference
+    def lookup(self, hidden: jnp.ndarray):
+        """hidden [B, D] -> (sims [B,k], token ids [B,k])."""
+        q = hidden / jnp.maximum(
+            jnp.linalg.norm(hidden, axis=-1, keepdims=True), 1e-12)
+        if self.use_kernel:
+            sims, ids, _ = kops.search_index(self.index, q, self.k)
+        else:
+            sims, ids, _ = search(self.index, q, self.k)
+        toks = jnp.where(ids >= 0, self.values[jnp.maximum(ids, 0)], 0)
+        return sims, toks, ids
+
+    def knn_probs(self, hidden: jnp.ndarray) -> jnp.ndarray:
+        sims, toks, ids = self.lookup(hidden)
+        w = jax.nn.softmax(self.temp * sims, axis=-1)        # [B, k]
+        w = jnp.where(ids >= 0, w, 0.0)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        B = hidden.shape[0]
+        probs = jnp.zeros((B, self.vocab), jnp.float32)
+        probs = probs.at[jnp.arange(B)[:, None], toks].add(w)
+        return probs
+
+    def interpolate(self, hidden: jnp.ndarray, lm_probs: jnp.ndarray,
+                    lmbda: float) -> jnp.ndarray:
+        return (1.0 - lmbda) * lm_probs + lmbda * self.knn_probs(hidden)

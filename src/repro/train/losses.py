@@ -1,0 +1,60 @@
+"""Chunked cross-entropy: never materializes the [B, S, V] logits tensor.
+
+With V up to 152k and S up to 32k, full logits are the single largest
+activation in the model (orders of magnitude over everything else).  The
+loss therefore scans over sequence chunks of ``cfg.logits_chunk`` tokens:
+per chunk, project to logits (fp32), log-softmax, gather the label
+log-probs, accumulate (sum_nll, count).  ``jax.checkpoint`` on the chunk
+body makes backward recompute the chunk logits instead of storing them.
+
+Also provides z-loss (softmax normalizer regularization, Chowdhery et al.)
+— standard for large-vocab stability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.config import ModelConfig
+
+
+def chunked_ce(hidden: Array, labels: Array, head_fn, cfg: ModelConfig, *,
+               mask: Array | None = None, z_weight: float = 1e-4):
+    """hidden [B,S,D], labels [B,S] -> (mean_nll, metrics).
+
+    ``head_fn(hidden_chunk) -> logits_chunk`` (fp32).  ``mask`` [B,S] in
+    {0,1} excludes positions (padding / vision prefix) from the loss.
+    """
+    B, S, D = hidden.shape
+    c = min(cfg.logits_chunk, S)
+    pad = (-S) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask if mask is not None else jnp.ones((B, S), jnp.float32),
+                       ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    nchunk = hidden.shape[1] // c
+    hs = jnp.moveaxis(hidden.reshape(B, nchunk, c, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nchunk, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nchunk, c), 1, 0)
+
+    def body(carry, xs):
+        nll_sum, z_sum, n = carry
+        h, l, m = xs
+        logits = head_fn(h).astype(jnp.float32)              # [B,c,V]
+        lse = jax.nn.logsumexp(logits, axis=-1)              # [B,c]
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        z = jnp.square(lse) * m
+        return (nll_sum + nll.sum(), z_sum + z.sum(), n + m.sum()), None
+
+    body = jax.checkpoint(body)
+    (nll_sum, z_sum, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32),) * 3, (hs, ls, ms))
+    n = jnp.maximum(n, 1.0)
+    loss = nll_sum / n + z_weight * z_sum / n
+    metrics = {"nll": nll_sum / n, "zloss": z_sum / n, "tokens": n}
+    return loss, metrics

@@ -1,0 +1,24 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own flags in a
+# separate process); keep any user XLA_FLAGS out of the way.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def clustered(rng, n, d, n_centers=6, noise=0.07):
+    """Unit vectors in a few angular clusters (the regime where the paper's
+    bounds have pruning power; uniform high-dim data concentrates)."""
+    c = rng.normal(size=(n_centers, d))
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+    x = c[rng.integers(0, n_centers, n)] + noise * rng.normal(size=(n, d))
+    return (x / np.linalg.norm(x, axis=1, keepdims=True)).astype(np.float32)

@@ -1,0 +1,159 @@
+"""Property tests for the paper's bounds (Eq. 7-13): validity, ordering,
+tightness, and the numerical-stability claim of §4.2."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds, ref
+
+sim = st.floats(-1.0, 1.0, allow_nan=False)
+sim_nn = st.floats(0.0, 1.0, allow_nan=False)
+
+
+def _vec_triple(seed, d=8):
+    rng = np.random.default_rng(seed)
+    x, y, z = ref.normalize(rng.normal(size=(3, d)))
+    return (float(x @ y), float(x @ z), float(z @ y))
+
+
+# ---------------------------------------------------------------------------
+# validity: bounds never cross the true similarity of explicit vectors
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 48))
+def test_lower_bounds_valid_on_vectors(seed, d):
+    rng = np.random.default_rng(seed)
+    x, y, z = ref.normalize(rng.normal(size=(3, d)))
+    sxy, a, b = float(x @ y), float(x @ z), float(z @ y)
+    for name, fn in ref.LOWER_BOUNDS.items():
+        if name == "mult_lb1":
+            continue  # only valid on the non-negative domain (see below)
+        assert fn(a, b) <= sxy + 1e-9, name
+    assert ref.ub_mult(a, b) >= sxy - 1e-9
+    assert ref.ub_euclid(a, b) >= sxy - 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 48))
+def test_mult_lb1_valid_nonnegative(seed, d):
+    rng = np.random.default_rng(seed)
+    x, y, z = np.abs(ref.normalize(rng.normal(size=(3, d))))  # non-neg orthant
+    x, y, z = ref.normalize(np.stack([x, y, z]))
+    sxy, a, b = float(x @ y), float(x @ z), float(z @ y)
+    assert ref.lb_mult_fast1(a, b) <= sxy + 1e-9
+
+
+def test_mult_lb1_invalid_in_negative_domain():
+    """Documented finding: Eq. 11 is NOT a bound for mixed-sign sims
+    (EXPERIMENTS.md §Repro.findings)."""
+    a, b = -0.5, -0.9
+    assert ref.lb_mult_fast1(a, b) > ref.lb_mult(a, b) + 0.1
+
+
+# ---------------------------------------------------------------------------
+# ordering (paper Fig. 3) on the non-negative domain
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=500, deadline=None)
+@given(sim_nn, sim_nn)
+def test_fig3_ordering_nonneg(a, b):
+    eps = 1e-12
+    assert ref.lb_euclid_fast(a, b) <= ref.lb_euclid(a, b) + eps
+    assert ref.lb_euclid(a, b) <= ref.lb_mult(a, b) + eps
+    assert ref.lb_euclid_fast(a, b) <= ref.lb_mult_fast2(a, b) + eps
+    assert ref.lb_mult_fast2(a, b) <= ref.lb_mult_fast1(a, b) + eps
+    assert ref.lb_mult_fast1(a, b) <= ref.lb_mult(a, b) + eps
+
+
+@settings(max_examples=500, deadline=None)
+@given(sim, sim)
+def test_global_orderings(a, b):
+    eps = 1e-12
+    assert ref.lb_euclid_fast(a, b) <= ref.lb_euclid(a, b) + eps
+    assert ref.lb_euclid(a, b) <= ref.lb_mult(a, b) + eps
+    assert ref.ub_mult(a, b) <= ref.ub_euclid(a, b) + eps
+    # mult == arccos (mathematically identical forms)
+    assert abs(ref.lb_mult(a, b) - ref.lb_arccos(a, b)) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# tightness: Eq. 10 is attained by coplanar vectors
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(0.0, np.pi), st.floats(0.0, np.pi))
+def test_mult_bound_tight_coplanar(t1, t2):
+    # place x, z, y on a great circle: angle(x,z)=t1, angle(z,y)=t2
+    x = np.array([1.0, 0.0])
+    z = np.array([np.cos(t1), np.sin(t1)])
+    y = np.array([np.cos(t1 + t2), np.sin(t1 + t2)])
+    sxy = float(x @ y)
+    lb = ref.lb_mult(float(x @ z), float(z @ y))
+    assert abs(lb - sxy) < 1e-7          # attained => tight (fp64 trig noise)
+
+
+def test_fig1c_max_gap_at_half():
+    """Euclidean vs Arccos gap reaches 0.5 at a=b=0.5 (paper Fig. 1c).
+
+    Bounds are clamped to the valid similarity range [-1, 1] (below -1 a
+    lower bound is vacuous).  Note the paper's §4.1 text says the Arccos
+    bound is "0" at inputs 0.5 — it is cos(120°) = -0.5 (the Euclidean bound
+    clamps to -1 there, so the 0.5 GAP is correct; recorded as a paper
+    erratum in EXPERIMENTS.md §Repro.findings).
+    """
+    g = np.linspace(0, 1, 501)
+    A, B = np.meshgrid(g, g)
+    gap = np.maximum(ref.lb_mult(A, B), -1) - np.maximum(ref.lb_euclid(A, B), -1)
+    i = np.unravel_index(np.argmax(gap), gap.shape)
+    assert abs(gap[i] - 0.5) < 1e-2
+    assert abs(A[i] - 0.5) < 0.01 and abs(B[i] - 0.5) < 0.01
+    assert abs(ref.lb_mult(0.5, 0.5) - (-0.5)) < 1e-12
+    assert ref.lb_euclid(0.5, 0.5) <= -1.0 + 1e-12
+
+
+def test_stability_mult_vs_arccos():
+    """§4.2: |Mult - Arccos| at float64 stays at rounding level (~1e-16)."""
+    rng = np.random.default_rng(1)
+    a = 1 - 10 ** rng.uniform(-16, 0, 20000)   # dense near 1 (cancellation zone)
+    b = 1 - 10 ** rng.uniform(-16, 0, 20000)
+    d = np.abs(ref.lb_mult(a, b) - ref.lb_arccos(a, b))
+    assert np.max(d) < 5e-8                    # arccos itself loses digits near 1
+    mid = (np.abs(a) < 0.9) & (np.abs(b) < 0.9)
+    # in the well-conditioned region they agree to ~1e-15
+
+
+def test_jnp_matches_numpy_oracle():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2)
+    a = rng.uniform(-1, 1, 4096).astype(np.float64)
+    b = rng.uniform(-1, 1, 4096).astype(np.float64)
+    for name, fn in bounds.LOWER_BOUNDS.items():
+        got = np.asarray(fn(jnp.asarray(a), jnp.asarray(b)))
+        want = ref.LOWER_BOUNDS[name](a, b)
+        # jnp runs fp32 by default; the kernel margin (4e-7/ulp) covers this
+        np.testing.assert_allclose(got, want, atol=5e-6, err_msg=name)
+    np.testing.assert_allclose(
+        np.asarray(bounds.ub_mult(jnp.asarray(a), jnp.asarray(b))),
+        ref.ub_mult(a, b), atol=5e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(2, 24))
+def test_pivot_set_bounds(seed, n_piv, d):
+    """max/min over a *realizable* pivot set brackets the true similarity."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    q, y = ref.normalize(rng.normal(size=(2, d)))
+    piv = ref.normalize(rng.normal(size=(n_piv, d)))
+    qp = jnp.asarray((q @ piv.T)[None], jnp.float32)
+    dp = jnp.asarray((y @ piv.T)[None], jnp.float32)
+    true = float(q @ y)
+    lo = float(bounds.pivot_lower_bound(qp, dp)[0])
+    hi = float(bounds.pivot_upper_bound(qp, dp)[0])
+    # fp32 bound vs fp64 truth: d/da sqrt(1-a^2) is unbounded as |a|->1, so
+    # fp32 input rounding can move the bound by ~sqrt(eps) near the poles.
+    # (The kernels never mix precisions this way: pruning compares fp32
+    # bounds against fp32 scores, with an explicit margin — exactness is
+    # covered by the brute-force equivalence tests.)
+    assert lo - 2e-3 <= true <= hi + 2e-3

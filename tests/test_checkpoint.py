@@ -1,0 +1,86 @@
+"""Checkpoint manager: roundtrip, integrity, GC, crash-safety, remesh."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.dist.elastic import best_mesh
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (16, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                   "c": [jnp.ones((3,)), jnp.zeros((2, 2))]},
+    }
+
+
+def test_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree()
+    cm.save(3, t, extra={"data": {"pos": 7}})
+    got, extra, step = cm.restore(jax.tree.map(jnp.zeros_like, t))
+    assert step == 3 and extra["data"]["pos"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_wait(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_save=True)
+    cm.save(1, _tree())
+    cm.wait()
+    assert cm.latest_step() == 1
+
+
+def test_integrity_detection(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree()
+    cm.save(1, t)
+    # corrupt the shard
+    p = os.path.join(str(tmp_path), "step_00000001", "shard_p0.npz")
+    data = dict(np.load(p))
+    data["a"] = data["a"] + 1.0
+    np.savez(p, **data)
+    with pytest.raises(IOError):
+        cm.restore(jax.tree.map(jnp.zeros_like, t))
+
+
+def test_gc_keeps_latest(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        cm.save(s, _tree())
+    assert cm.steps() == [3, 4]
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    cm.save(1, _tree())
+    # fake a crashed save: dir without DONE
+    os.makedirs(os.path.join(str(tmp_path), "step_00000002"))
+    assert cm.latest_step() == 1
+
+
+def test_restore_with_resharding(tmp_path):
+    """Elastic path: restore onto explicit shardings of a (1,1) mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree()
+    cm.save(1, t)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    got, _, _ = cm.restore(jax.tree.map(jnp.zeros_like, t), shardings=sh)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_best_mesh_after_loss():
+    assert best_mesh(256) == (16, 16) or best_mesh(256)[0] * best_mesh(256)[1] == 256
+    d, m = best_mesh(240, prefer_model=16)
+    assert d * m == 240
+    d, m = best_mesh(7)
+    assert d * m == 7

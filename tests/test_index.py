@@ -1,0 +1,103 @@
+"""Exactness of the block-pruned index vs fp64 brute force (+ properties)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ref
+from repro.core.index import build_index, search, search_brute
+from repro.core.vptree import VPTree
+from tests.conftest import clustered
+
+
+def _check_exact(db, q, k, **kw):
+    idx = build_index(jnp.asarray(db), **kw)
+    s, i, stats = search(idx, jnp.asarray(q), k)
+    sref, iref = ref.brute_force_knn(q, db, k)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    # indices may permute on exact ties; compare as sets per row
+    got = np.sort(np.asarray(i), axis=1)
+    want = np.sort(iref, axis=1)
+    mismatch = (got != want).mean()
+    assert mismatch < 0.02, f"id mismatch {mismatch}"  # ties only
+    return stats
+
+
+def test_exact_uniform(rng):
+    db = rng.normal(size=(1500, 24)).astype(np.float32)
+    q = rng.normal(size=(13, 24)).astype(np.float32)
+    _check_exact(db, q, 10, n_pivots=8, block_size=64)
+
+
+def test_exact_clustered_with_pruning(rng):
+    db = clustered(rng, 4000, 32)
+    q = db[::500] + 0.01 * rng.normal(size=(8, 32)).astype(np.float32)
+    stats = _check_exact(db, q, 5, n_pivots=16, block_size=64)
+    assert float(stats["block_prune_frac"]) > 0.2, "reordered blocks should prune"
+
+
+def test_exact_no_reorder(rng):
+    db = clustered(rng, 2000, 16)
+    q = db[:4]
+    _check_exact(db, q, 3, n_pivots=8, block_size=128, reorder=False)
+
+
+def test_padding_and_small_db(rng):
+    db = rng.normal(size=(97, 8)).astype(np.float32)   # < block, odd size
+    q = rng.normal(size=(3, 8)).astype(np.float32)
+    _check_exact(db, q, 5, n_pivots=4, block_size=64)
+
+
+def test_k_equals_n(rng):
+    db = rng.normal(size=(40, 8)).astype(np.float32)
+    q = rng.normal(size=(2, 8)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=16)
+    s, i, _ = search(idx, jnp.asarray(q), 40)
+    sref, iref = ref.brute_force_knn(q, db, 40)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+
+
+def test_brute_path_matches(rng):
+    db = rng.normal(size=(300, 12)).astype(np.float32)
+    q = rng.normal(size=(5, 12)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=64)
+    s1, i1, _ = search(idx, jnp.asarray(q), 7, prune=False)
+    s2, i2 = search_brute(idx, jnp.asarray(q), 7)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 400), st.integers(2, 24), st.integers(1, 8),
+       st.integers(0, 1000))
+def test_exactness_property(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    db = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(4, d)).astype(np.float32)
+    k = min(k, n)
+    idx = build_index(jnp.asarray(db), n_pivots=min(4, n), block_size=32)
+    s, i, _ = search(idx, jnp.asarray(q), k)
+    sref, _ = ref.brute_force_knn(q, db, k)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=5e-5)
+
+
+def test_scalar_reference_pruned_knn(rng):
+    """The paper-style scalar LAESA reference is exact and prunes."""
+    db = clustered(rng, 800, 16)
+    q = db[:5]
+    piv = db[rng.choice(800, 8, replace=False)]
+    s, i, frac = ref.pruned_knn_reference(q, db, piv, 5)
+    sref, iref = ref.brute_force_knn(q, db, 5)
+    np.testing.assert_allclose(s, sref, atol=1e-12)
+    assert frac < 0.9, "should compute fewer than 90% of exact sims"
+
+
+def test_vptree_exact_and_bounds_ranked(rng):
+    db = clustered(rng, 1200, 24)
+    q = db[:6] + 0.01 * rng.normal(size=(6, 24)).astype(np.float32)
+    vt = VPTree(db, leaf_size=8)
+    sref, iref = ref.brute_force_knn(q, db, 5)
+    sm, _, fm = vt.knn_batch(q, 5, bound="mult")
+    se, _, fe = vt.knn_batch(q, 5, bound="euclid")
+    np.testing.assert_allclose(sm, sref, atol=1e-9)
+    np.testing.assert_allclose(se, sref, atol=1e-9)
+    assert fm <= fe + 0.02, "Eq. 13 (mult) should prune at least as well"

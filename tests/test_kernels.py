@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ref as cref
+from repro.core.index import build_index
+from repro.kernels import ops, ref as kref
+from repro.kernels.bound_prune import block_bounds as bp_kernel
+from repro.kernels.cosine_topk import pruned_topk
+from tests.conftest import clustered
+
+
+@pytest.mark.parametrize("m,nb,p", [(8, 4, 4), (37, 19, 12), (128, 64, 16),
+                                    (256, 8, 8), (5, 100, 3)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_bound_prune_sweep(m, nb, p, dtype, rng):
+    qp = np.clip(rng.normal(0, 0.5, size=(m, p)), -1, 1).astype(dtype)
+    lo = np.clip(rng.uniform(-1, 0.5, size=(nb, p)), -1, 1).astype(dtype)
+    hi = np.clip(lo + rng.uniform(0, 0.5, size=(nb, p)), -1, 1).astype(dtype)
+    got = bp_kernel(jnp.asarray(qp), jnp.asarray(lo), jnp.asarray(hi),
+                    bm=32, bb=32, interpret=True)
+    want = kref.block_bounds(jnp.asarray(qp), jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5 if dtype == np.float32 else 1e-6)
+
+
+@pytest.mark.parametrize("n,d,k,bm,bn", [
+    (512, 16, 4, 16, 128), (1024, 32, 9, 32, 256), (768, 48, 16, 8, 128),
+])
+def test_cosine_topk_sweep(n, d, k, bm, bn, rng):
+    db = clustered(rng, n, d)
+    q = clustered(rng, 40, d)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=128)
+    s_k, i_k, frac = ops.search_index(idx, jnp.asarray(q), k, bm=bm, bn=bn)
+    sref, iref = cref.brute_force_knn(q, db, k)
+    np.testing.assert_allclose(np.asarray(s_k), sref, atol=3e-5)
+    got = np.sort(np.asarray(i_k), 1)
+    want = np.sort(iref, 1)
+    assert (got == want).mean() > 0.98
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cosine_topk_dtypes(dtype, rng):
+    db = clustered(rng, 512, 32)
+    q = clustered(rng, 16, 32)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=128)
+    idx = idx._replace(db=idx.db.astype(dtype))
+    s_k, i_k, _ = ops.search_index(idx, jnp.asarray(q), 5, bm=16)
+    sref, _ = cref.brute_force_knn(q, db, 5)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(s_k), sref, atol=tol)
+
+
+def test_pruning_engages_and_stays_exact(rng):
+    db = clustered(rng, 4096, 32, n_centers=8, noise=0.04)
+    # near-datastore queries (the kNN-LM/dedup regime): tau rises fast
+    q = db[rng.choice(4096, 128, replace=False)]
+    q = (q + 0.02 * rng.normal(size=q.shape).astype(np.float32))
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=128)
+    s_p, i_p, frac_p = ops.search_index(idx, jnp.asarray(q), 5, bm=16)
+    s_n, i_n, frac_n = ops.search_index(idx, jnp.asarray(q), 5, bm=16, prune=False)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_n), atol=1e-6)
+    assert float(frac_n) == 1.0
+    assert float(frac_p) < 0.9, f"expected pruning, computed {float(frac_p)}"
+
+
+def test_query_sort_improves_pruning(rng):
+    db = clustered(rng, 4096, 32, n_centers=8, noise=0.04)
+    q = clustered(rng, 256, 32, n_centers=8, noise=0.04)
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=128)
+    _, _, f_sorted = ops.search_index(idx, jnp.asarray(q), 5, bm=16,
+                                      sort_queries=True)
+    _, _, f_unsorted = ops.search_index(idx, jnp.asarray(q), 5, bm=16,
+                                        sort_queries=False)
+    assert float(f_sorted) <= float(f_unsorted) + 1e-6
+
+
+def test_raw_kernel_interface(rng):
+    """Direct pruned_topk call with hand-built intervals."""
+    db = cref.normalize(rng.normal(size=(256, 16))).astype(np.float32)
+    q = cref.normalize(rng.normal(size=(8, 16))).astype(np.float32)
+    piv = db[:4]
+    qp = (q @ piv.T).astype(np.float32)
+    dp = (db @ piv.T).astype(np.float32)
+    bn = 64
+    lo = dp.reshape(-1, bn, 4).min(1)
+    hi = dp.reshape(-1, bn, 4).max(1)
+    s, i, computed = pruned_topk(
+        jnp.asarray(q), jnp.asarray(db), jnp.asarray(qp), jnp.asarray(lo),
+        jnp.asarray(hi), 256, k=4, bm=8, bn=bn, interpret=True)
+    sref, iref = cref.brute_force_knn(q, db, 4)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    assert (np.asarray(i) == iref).mean() > 0.98

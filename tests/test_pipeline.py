@@ -1,0 +1,62 @@
+"""Data pipeline: determinism, resumability, shard partitioning, dedup."""
+import numpy as np
+import pytest
+
+from repro.data.dedup import dedup_mask, embed_tokens, find_near_duplicates
+from repro.data.pipeline import ShardInfo, SyntheticLM, TokenFileSource
+
+
+def test_synthetic_deterministic():
+    a = SyntheticLM(100, 32, 8, seed=7)
+    b = SyntheticLM(100, 32, 8, seed=7)
+    for step in (0, 5, 1000):
+        np.testing.assert_array_equal(a.batch(step)["tokens"],
+                                      b.batch(step)["tokens"])
+
+
+def test_synthetic_resume_is_stateless():
+    a = SyntheticLM(100, 32, 8, seed=7)
+    want = a.batch(42)
+    b = SyntheticLM(100, 32, 8, seed=7)
+    b.restore(a.state())
+    np.testing.assert_array_equal(b.batch(42)["tokens"], want["tokens"])
+
+
+def test_synthetic_shards_partition_global_batch():
+    full = SyntheticLM(100, 16, 8, seed=3)
+    parts = [SyntheticLM(100, 16, 8, seed=3,
+                         shard=ShardInfo(i, 4)).batch(5)["tokens"]
+             for i in range(4)]
+    assert all(p.shape == (2, 16) for p in parts)
+    # shards are distinct (not copies of each other)
+    assert not np.array_equal(parts[0], parts[1])
+
+
+def test_token_file_source(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 1000, size=170 * 17, dtype=np.int32)
+    data.tofile(path)
+    src = TokenFileSource(path, 16, 8, seed=1)
+    b0 = src.batch(0)
+    assert b0["tokens"].shape == (8, 16)
+    np.testing.assert_array_equal(src.batch(0)["tokens"], b0["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b0["labels"][:, :-1], b0["tokens"][:, 1:])
+    # different steps give different samples; epoch wraps don't crash
+    many = {src.batch(s)["tokens"].tobytes() for s in range(6)}
+    assert len(many) > 1
+
+
+def test_dedup_finds_planted_duplicates(rng):
+    toks = rng.integers(0, 500, size=(60, 64))
+    toks[13] = toks[4]          # exact duplicate
+    toks[27, :60] = toks[9, :60]  # near duplicate
+    emb = embed_tokens(toks)
+    pairs, stats = find_near_duplicates(emb, threshold=0.9, k=4,
+                                        n_pivots=8, block_size=32)
+    flat = set(pairs)
+    assert (4, 13) in flat
+    assert (9, 27) in flat
+    keep = dedup_mask(60, pairs)
+    assert not keep[13] and keep[4]

@@ -1,0 +1,91 @@
+"""Serving engine + kNN-LM: cached decode equals teacher forcing; the
+datastore measurably shifts next-token probabilities toward neighbors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import model_fns, synthetic_batch
+from repro.models.lm import embed_hidden
+from repro.serve.engine import Engine
+from repro.serve.knnlm import KNNDatastore
+
+
+def _tiny(arch="tinyllama-1.1b"):
+    cfg = smoke_config(arch).replace(dtype="float32")
+    fns = model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    return cfg, fns, params
+
+
+def test_engine_prefill_then_decode_matches_forward():
+    cfg, fns, params = _tiny()
+    batch = synthetic_batch(cfg, 2, 10)
+    eng = Engine(fns, params, max_seq=40)
+    cache, clen, last_h = eng.prefill(batch)
+    # teacher-forced forward over prompt gives the same last hidden
+    h_full, _, _ = fns.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(last_h), np.asarray(h_full[:, -1]),
+                               atol=2e-4)
+    toks, _ = eng.decode(cache, clen, batch["tokens"][:, -1:], 5)
+    assert toks.shape == (2, 5)
+    assert int(toks.max()) < cfg.vocab
+
+
+def test_engine_decode_logits_match_teacher_forcing():
+    """First decode step's logits == teacher-forced last-position logits
+    (argmax equality is fp-flaky when two logits tie; compare values)."""
+    cfg, fns, params = _tiny()
+    batch = synthetic_batch(cfg, 1, 8)
+    eng = Engine(fns, params, max_seq=32)
+    cache, clen, _ = eng.prefill(batch)
+    # decode one token: feeds tokens[-1]... the cache already contains it, so
+    # compare against forward over the prompt with the same last token twice
+    ext = jnp.concatenate([batch["tokens"], batch["tokens"][:, -1:]], axis=1)
+    h_ref, _, _ = fns.forward(params, {"tokens": ext})
+    ref_logits = fns.lm_head(params, h_ref)[:, -1]
+    _, logits, _ = eng._decode_jit(params, batch["tokens"][:, -1:], cache, clen)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               atol=2e-3)
+    # decode is deterministic
+    t1, _ = eng.decode(cache, clen, batch["tokens"][:, -1:], 3)
+    t2, _ = eng.decode(cache, clen, batch["tokens"][:, -1:], 3)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_knn_datastore_boosts_neighbor_tokens(rng):
+    cfg, fns, params = _tiny()
+    d = cfg.d_model
+    # synthetic datastore: embeddings clustered around 3 prototypes, each
+    # mapped to a distinct next-token
+    protos = rng.normal(size=(3, d)).astype(np.float32)
+    protos /= np.linalg.norm(protos, axis=1, keepdims=True)
+    embs, toks = [], []
+    for i, t in enumerate([7, 11, 23]):
+        e = protos[i] + 0.05 * rng.normal(size=(50, d)).astype(np.float32)
+        embs.append(e)
+        toks.extend([t] * 50)
+    ds = KNNDatastore.from_pairs(np.concatenate(embs), np.array(toks),
+                                 cfg.vocab, k=8, n_pivots=4, block_size=32)
+    q = jnp.asarray(protos[1][None])
+    probs = ds.knn_probs(q)
+    assert int(jnp.argmax(probs[0])) == 11
+    # interpolation moves LM probs toward the datastore token
+    lm = jnp.full((1, cfg.vocab), 1.0 / cfg.vocab)
+    mixed = ds.interpolate(q, lm, 0.5)
+    assert float(mixed[0, 11]) > float(lm[0, 11])
+    np.testing.assert_allclose(float(mixed.sum()), 1.0, atol=1e-5)
+
+
+def test_knn_from_corpus_and_engine_integration():
+    cfg, fns, params = _tiny()
+    batches = [synthetic_batch(cfg, 2, 16, seed=s) for s in range(2)]
+    ds = KNNDatastore.from_corpus(fns, params, batches, cfg.vocab, k=4,
+                                  n_pivots=4, block_size=32)
+    eng = Engine(fns, params, max_seq=32, knn=ds, lmbda=0.3)
+    batch = synthetic_batch(cfg, 2, 8, seed=9)
+    cache, clen, _ = eng.prefill(batch)
+    toks, _ = eng.decode(cache, clen, batch["tokens"][:, -1:], 3)
+    assert toks.shape == (2, 3)
+    assert not np.isnan(np.asarray(toks)).any()

@@ -1,0 +1,115 @@
+"""Trainer: learning works, checkpoint/restart is exact, stragglers are
+detected, gradient compression preserves convergence (error feedback)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data.pipeline import SyntheticLM, ShardInfo
+from repro.models import model_fns
+from repro.optim import compression
+from repro.train.train_step import init_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _setup(tmp, total=14, ckpt_every=5, arch="tinyllama-1.1b", **step_kw):
+    cfg = smoke_config(arch).replace(n_layers=2, d_model=32, d_ff=64,
+                                     n_heads=2, n_kv_heads=2, d_head=16,
+                                     vocab=64)
+    fns = model_fns(cfg)
+    step = jax.jit(make_train_step(fns, cfg, **step_kw))
+    state = init_state(fns, jax.random.PRNGKey(0),
+                       compress_grads=step_kw.get("compress_grads", False))
+    data = SyntheticLM(cfg.vocab, 16, 8, seed=1)
+    tc = TrainerConfig(total_steps=total, ckpt_every=ckpt_every,
+                       ckpt_dir=os.path.join(tmp, "ckpt"), log_every=100)
+    return Trainer(step, state, data, tc), cfg
+
+
+def test_loss_decreases(tmp_path):
+    tr, _ = _setup(str(tmp_path), total=30)
+    out = tr.run(install_signal=False)
+    first = np.mean([h["loss"] for h in out["history"][:5]])
+    last = np.mean([h["loss"] for h in out["history"][-5:]])
+    assert last < first, (first, last)
+
+
+def test_checkpoint_restart_exact(tmp_path):
+    # run 1: stop "crashed" at step 9 (last ckpt at 5... plus final at 9)
+    tr1, _ = _setup(str(tmp_path), total=9)
+    out1 = tr1.run(install_signal=False)
+    losses1 = {h["step"]: h["loss"] for h in out1["history"]}
+    # continue to 14 in a fresh trainer (simulated restart)
+    tr2, _ = _setup(str(tmp_path), total=14)
+    out2 = tr2.run(install_signal=False)
+    assert out2["final_step"] == 14
+    assert out2["history"][0]["step"] == 10, "resumed from checkpoint"
+    # reference: uninterrupted run in a different dir
+    tr3, _ = _setup(str(tmp_path) + "_ref", total=14)
+    out3 = tr3.run(install_signal=False)
+    ref = {h["step"]: h["loss"] for h in out3["history"]}
+    for h in out2["history"]:
+        assert abs(h["loss"] - ref[h["step"]]) < 1e-4, h["step"]
+
+
+def test_straggler_watchdog(tmp_path):
+    tr, _ = _setup(str(tmp_path), total=12, ckpt_every=50)
+    import time
+    orig = tr.train_step
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 8:
+            # injected straggler, scaled to the live step time so the test is
+            # robust to a loaded host
+            time.sleep(max(1.0, 5.0 * (tr._ema or 0.2)))
+        return orig(state, batch)
+
+    tr.train_step = slow_step
+    out = tr.run(install_signal=False)
+    # the 8th call is step index 7 (pre-increment)
+    assert any(6 <= s <= 9 for s in out["stragglers"]), out["stragglers"]
+
+
+def test_grad_compression_error_feedback(tmp_path):
+    tr, _ = _setup(str(tmp_path), total=25, ckpt_every=100,
+                   compress_grads=True)
+    out = tr.run(install_signal=False)
+    first = np.mean([h["loss"] for h in out["history"][:5]])
+    last = np.mean([h["loss"] for h in out["history"][-5:]])
+    assert last < first, "int8+EF training still converges"
+
+
+def test_compression_error_feedback_bounded(rng):
+    """EF property: accumulated residual stays bounded over many steps."""
+    g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    err = jnp.zeros_like(g)
+    for _ in range(50):
+        deq, err = compression.compress_tree(g, err)
+        # per-step: deq + err == g + old_err (no signal lost)
+    assert float(jnp.abs(err).max()) < float(jnp.abs(g).max()) * 0.05
+
+
+def test_accum_matches_single_batch(tmp_path):
+    """Gradient accumulation == one big batch (same loss trajectory)."""
+    cfg = smoke_config("tinyllama-1.1b").replace(
+        n_layers=2, d_model=32, d_ff=64, n_heads=2, n_kv_heads=2, d_head=16,
+        vocab=64)
+    fns = model_fns(cfg)
+    from repro.models import synthetic_batch
+    batch = synthetic_batch(cfg, 8, 16)
+    s1 = init_state(fns, jax.random.PRNGKey(0))
+    s2 = jax.tree.map(lambda x: x, s1)
+    f1 = jax.jit(make_train_step(fns, cfg, accum=1))
+    f4 = jax.jit(make_train_step(fns, cfg, accum=4))
+    s1, m1 = f1(s1, batch)
+    s2, m2 = f4(s2, batch)
+    # mean loss over microbatches differs from big-batch loss by batch-norm
+    # effects only through the metrics; grads averaged -> params match closely
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                     s1["params"], s2["params"])
+    assert max(jax.tree.leaves(d)) < 5e-3
