@@ -1,8 +1,9 @@
 """Search throughput scaling: block-pruned vs brute-force exact kNN.
 
-Wall-clock on this CPU host (XLA jit, single core) across datastore sizes.
-The derived column reports the *work avoided* (tiles or blocks pruned),
-which is hardware-independent, alongside the measured speedup here.
+Wall-clock on this CPU host (XLA jit, single core) across datastore sizes,
+all through the unified :class:`SearchEngine`.  The derived column reports
+the *work avoided* (tiles or blocks pruned), which is hardware-independent,
+alongside the measured speedup here.
 """
 from __future__ import annotations
 
@@ -13,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ref
-from repro.core.index import build_index, search, search_brute
+from repro.core.index import build_index
+from repro.search import SearchEngine
 
 
 def _time(f, *args, reps=3):
@@ -34,12 +36,21 @@ def run(sizes=(4096, 16384), d: int = 64, k: int = 10, m: int = 64):
                            0.05 * rng.normal(size=(n, d))).astype(np.float32)
         q = jnp.asarray(db[rng.choice(n, m, replace=False)])
         idx = build_index(jnp.asarray(db), n_pivots=16, block_size=128)
-        t_brute = _time(lambda: search_brute(idx, q, k))
-        t_pruned = _time(lambda: search(idx, q, k))
-        _, _, stats = search(idx, q, k)
+        brute = SearchEngine(idx, backend="brute")
+        base = SearchEngine(idx, backend="scan", warm_start=False,
+                            best_first=False)
+        eng = SearchEngine(idx, backend="scan")
+        t_brute = _time(lambda: brute.search(q, k)[:2])
+        t_base = _time(lambda: base.search(q, k)[:2])
+        t_eng = _time(lambda: eng.search(q, k)[:2])
+        _, _, st_base = base.search(q, k)
+        _, _, st_eng = eng.search(q, k)
         rows.append((f"knn_scale/n{n}/brute_us", t_brute * 1e6, ""))
-        rows.append((f"knn_scale/n{n}/pruned_us", t_pruned * 1e6,
-                     f"block_prune_frac={float(stats['block_prune_frac']):.3f}"))
+        rows.append((f"knn_scale/n{n}/pruned_us", t_base * 1e6,
+                     f"block_prune_frac={st_base.block_prune_frac:.3f}"))
+        rows.append((f"knn_scale/n{n}/engine_us", t_eng * 1e6,
+                     f"warm-start+best-first, block_prune_frac="
+                     f"{st_eng.block_prune_frac:.3f}"))
     return rows
 
 

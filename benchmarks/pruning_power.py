@@ -6,71 +6,106 @@ Three structures x two bound families, on three data regimes:
   * VP-tree (paper-faithful CPU index): exact-similarity fraction computed
     with the Eq. 13 (mult) vs reverse-Eq. 7 (euclid) subtree bounds,
   * scalar LAESA (per-point pivot table): the reference pruning ceiling,
-  * TPU block index + Pallas kernel: fraction of MXU tiles computed.
+  * the unified SearchEngine (scan + Pallas kernel backends), natural-order
+    baseline vs τ warm-start + best-first block ordering.
 
 Regimes: uniform high-dim (concentration -> little pruning, expected per the
 paper's own curse-of-dimensionality discussion), clustered embeddings (the
 realistic neural-embedding case), and the dedup regime (threshold ~ 1).
+
+``--quick`` runs a smaller instance of the clustered regime only (CI smoke).
 """
 from __future__ import annotations
+
+import argparse
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ref
-from repro.core.index import build_index, search
+from repro.core.index import build_index
 from repro.core.vptree import VPTree
-from repro.kernels import ops
+from repro.search import SearchEngine
 
 
-def _datasets(n=3000, d=64, seed=0):
+def _datasets(n=3000, d=64, seed=0, regimes=("uniform", "clustered", "dedup")):
     rng = np.random.default_rng(seed)
-    uni = ref.normalize(rng.normal(size=(n, d))).astype(np.float32)
+    out = {}
+    if "uniform" in regimes:
+        out["uniform"] = ref.normalize(rng.normal(size=(n, d))).astype(np.float32)
     c = ref.normalize(rng.normal(size=(8, d)))
     clu = ref.normalize(
         c[rng.integers(0, 8, n)] + 0.05 * rng.normal(size=(n, d))
     ).astype(np.float32)
-    dup = clu.copy()
-    dup[n // 2:] = dup[: n - n // 2] + 1e-3 * rng.normal(
-        size=(n - n // 2, d)).astype(np.float32)   # near-duplicate regime
-    return {"uniform": uni, "clustered": clu, "dedup": dup}
+    if "clustered" in regimes:
+        out["clustered"] = clu
+    if "dedup" in regimes:
+        dup = clu.copy()
+        dup[n // 2:] = dup[: n - n // 2] + 1e-3 * rng.normal(
+            size=(n - n // 2, d)).astype(np.float32)   # near-duplicate regime
+        out["dedup"] = dup
+    return out
 
 
-def run(k: int = 10, n_queries: int = 32):
+def run(k: int = 10, n_queries: int = 32, *, quick: bool = False):
     rows = []
     rng = np.random.default_rng(1)
-    for regime, db in _datasets().items():
+    data = (_datasets(n=1024, regimes=("clustered",)) if quick
+            else _datasets())
+    for regime, db in data.items():
         q = db[rng.choice(len(db), n_queries, replace=False)]
         q = ref.normalize(q + 0.01 * rng.normal(size=q.shape)).astype(np.float32)
 
-        vt = VPTree(db, leaf_size=16)
-        _, _, f_mult = vt.knn_batch(q, k, bound="mult")
-        _, _, f_eucl = vt.knn_batch(q, k, bound="euclid")
-        rows.append((f"pruning/{regime}/vptree_exact_frac_mult", f_mult,
-                     "lower = better pruning"))
-        rows.append((f"pruning/{regime}/vptree_exact_frac_euclid", f_eucl,
-                     "mult <= euclid expected"))
+        if not quick:
+            vt = VPTree(db, leaf_size=16)
+            _, _, f_mult = vt.knn_batch(q, k, bound="mult")
+            _, _, f_eucl = vt.knn_batch(q, k, bound="euclid")
+            rows.append((f"pruning/{regime}/vptree_exact_frac_mult", f_mult,
+                         "lower = better pruning"))
+            rows.append((f"pruning/{regime}/vptree_exact_frac_euclid", f_eucl,
+                         "mult <= euclid expected"))
 
-        piv = db[rng.choice(len(db), 16, replace=False)]
-        _, _, f_laesa = ref.pruned_knn_reference(q[:8], db, piv, k)
-        rows.append((f"pruning/{regime}/laesa_exact_frac", f_laesa,
-                     "scalar per-point ceiling"))
+            piv = db[rng.choice(len(db), 16, replace=False)]
+            _, _, f_laesa = ref.pruned_knn_reference(q[:8], db, piv, k)
+            rows.append((f"pruning/{regime}/laesa_exact_frac", f_laesa,
+                         "scalar per-point ceiling"))
 
         idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
-        _, _, stats = search(idx, jnp.asarray(q), k, element_stats=True)
-        rows.append((f"pruning/{regime}/block_prune_frac",
-                     float(stats["block_prune_frac"]),
-                     "TPU block granularity"))
-        rows.append((f"pruning/{regime}/elem_prunable_frac",
-                     float(stats["elem_prune_frac"]),
-                     "per-element bound ceiling"))
+        qj = jnp.asarray(q)
 
-        _, _, tile_frac = ops.search_index(idx, jnp.asarray(q), k, bm=8)
+        # natural-order scan, no warm start: the pre-engine baseline
+        base = SearchEngine(idx, backend="scan", warm_start=False,
+                            best_first=False)
+        _, _, st0 = base.search(qj, k, element_stats=True)
+        rows.append((f"pruning/{regime}/block_prune_frac",
+                     st0.block_prune_frac, "scan, natural order (baseline)"))
+        rows.append((f"pruning/{regime}/elem_prunable_frac",
+                     st0.elem_prune_frac, "per-element bound ceiling"))
+
+        # engine defaults: τ warm-start + best-first block ordering
+        eng = SearchEngine(idx, backend="scan")
+        _, _, st1 = eng.search(qj, k)
+        rows.append((f"pruning/{regime}/block_prune_frac_engine",
+                     st1.block_prune_frac,
+                     "scan, tau warm-start + best-first"))
+
+        kern0 = SearchEngine(idx, backend="kernel", bm=8, warm_start=False,
+                             best_first=False)
+        _, _, kt0 = kern0.search(qj, k)
         rows.append((f"pruning/{regime}/kernel_tile_computed_frac",
-                     float(tile_frac), "Pallas kernel, bm=8"))
+                     kt0.tile_computed_frac, "Pallas kernel, bm=8 (baseline)"))
+        kern1 = SearchEngine(idx, backend="kernel", bm=8)
+        _, _, kt1 = kern1.search(qj, k)
+        rows.append((f"pruning/{regime}/kernel_tile_computed_frac_engine",
+                     kt1.tile_computed_frac,
+                     "Pallas kernel, bm=8, warm-start + best-first"))
     return rows
 
 
 if __name__ == "__main__":
-    for name, val, note in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small clustered-only smoke run (CI)")
+    args = ap.parse_args()
+    for name, val, note in run(quick=args.quick):
         print(f"{name},{val:.4f},{note}")

@@ -8,8 +8,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bounds, ref, build_index, search, search_brute
+from repro.core import bounds, ref, build_index, search_brute
 from repro.core.vptree import VPTree
+from repro.search import SearchEngine
 
 rng = np.random.default_rng(0)
 
@@ -22,18 +23,19 @@ print(f"sim(x,z)={a:+.3f}  sim(z,y)={b:+.3f}")
 print(f"Eq.10/13 bound sim(x,y) in [{lo:+.3f}, {hi:+.3f}]  (true {true:+.3f})")
 assert lo - 1e-9 <= true <= hi + 1e-9
 
-# --- 2. exact kNN with block pruning ---------------------------------------
+# --- 2. exact kNN through the unified SearchEngine -------------------------
 centers = ref.normalize(rng.normal(size=(8, 64)))
 db = ref.normalize(centers[rng.integers(0, 8, 20_000)]
                    + 0.05 * rng.normal(size=(20_000, 64))).astype(np.float32)
 queries = jnp.asarray(db[rng.choice(20_000, 32)])
 
-index = build_index(jnp.asarray(db), n_pivots=16, block_size=128)
-sims, ids, stats = search(index, queries, 10)
-sims_b, ids_b = search_brute(index, queries, 10)
+engine = SearchEngine.build(jnp.asarray(db), n_pivots=16, block_size=128)
+sims, ids, stats = engine.search(queries, 10)
+sims_b, ids_b = search_brute(engine.index, queries, 10)
 np.testing.assert_allclose(np.asarray(sims), np.asarray(sims_b), atol=1e-6)
-print(f"\nblock-pruned exact 10-NN over 20k vectors: "
-      f"{float(stats['block_prune_frac']):.0%} of (query, block) work pruned, "
+print(f"\nexact 10-NN over 20k vectors (backend={stats.backend}, "
+      f"τ warm-start + best-first order): "
+      f"{stats.block_prune_frac:.0%} of (query, block) work pruned, "
       f"results identical to brute force")
 
 # --- 3. the paper-faithful VP-tree, Eq.13 vs chord bound --------------------

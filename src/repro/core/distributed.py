@@ -1,12 +1,15 @@
 """Mesh-sharded exact cosine search: the pod-scale datastore.
 
-The datastore rows shard across every device of the mesh (the product of all
-named axes handed in).  Each device holds its own :class:`BlockIndex` shard —
-pivots are *local* to a shard, which keeps build embarrassingly parallel and,
-because a shard covers a narrower slice of the sphere, makes the local Eq. 13
-bounds slightly tighter than global pivots would be.
+This module is the engine room of the SearchEngine's ``"sharded"`` backend
+(:mod:`repro.search.backends`): the datastore rows shard across every device
+of the mesh (the product of all named axes handed in).  Each device holds
+its own :class:`BlockIndex` shard — pivots are *local* to a shard, which
+keeps build embarrassingly parallel and, because a shard covers a narrower
+slice of the sphere, makes the local Eq. 13 bounds slightly tighter than
+global pivots would be.
 
-Search is shard-local block-pruned top-k followed by a tiny global merge:
+Search is the shard-local *scan* inner loop (so the engine's τ warm-start
+and best-first ordering apply per shard) followed by a tiny global merge:
 ``all_gather`` of the per-shard (k sims, k global ids) — ``O(devices * k)``
 bytes, negligible next to the avoided score matmuls — then ``lax.top_k``.
 Exactness is preserved: every shard returns its true local top-k and the
@@ -26,9 +29,10 @@ import numpy as np
 from jax import Array
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.index import BlockIndex, build_index, search
+from repro.core.index import BlockIndex, build_index
 
-__all__ = ["build_sharded_index", "make_sharded_search", "sharded_search_local"]
+__all__ = ["build_sharded_index", "make_sharded_search", "sharded_search_local",
+           "place_sharded_index"]
 
 
 def build_sharded_index(
@@ -70,36 +74,53 @@ def build_sharded_index(
     return stacked
 
 
-def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names):
-    """Body that runs inside ``shard_map``: local search + global merge.
+def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names,
+                         *, warm_start: bool = False, best_first: bool = False,
+                         with_stats: bool = False):
+    """Body that runs inside ``shard_map``: local scan + global merge.
 
     ``index`` arrives with the leading shard axis of size 1 (this device's
-    shard); ``queries`` are replicated.
+    shard); ``queries`` are replicated.  ``warm_start`` / ``best_first``
+    are the engine policies, applied to each shard's local scan.
     """
     from repro.dist.collectives import topk_allgather_merge
+    from repro.search.backends import map_row_ids, prep_queries, scan_search
     local = jax.tree.map(lambda x: x[0], index)
-    # `search` maps results through row_ids, which build_sharded_index bakes
-    # as GLOBAL ids — no rank arithmetic needed here.
-    sims, gids, _stats = search(local, queries, k)
+    qn, qp = prep_queries(local, queries)
+    sims, pos, blk_pruned, _ = scan_search(
+        local, qn, qp, k, warm_start=warm_start, best_first=best_first)
+    # build_sharded_index bakes GLOBAL ids into row_ids — no rank arithmetic
+    gids = map_row_ids(local.row_ids, pos)
     # tiny collective: O(devices * k) candidates
-    return topk_allgather_merge(sims, gids, k, axis_names)
+    merged = topk_allgather_merge(sims, gids, k, axis_names)
+    if not with_stats:
+        return merged
+    frac = blk_pruned / (qn.shape[0] * local.n_blocks)
+    return merged + (jax.lax.pmean(frac, axis_names),)
 
 
-def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None):
+def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None,
+                        *, warm_start: bool = False, best_first: bool = False,
+                        with_stats: bool = False):
     """Build a jitted ``(index, queries, k) -> (sims, gids)`` closure.
 
     ``axis_names`` defaults to *all* mesh axes — the datastore shards over
-    every chip.  Results are fully replicated.
+    every chip.  Results are fully replicated.  With ``with_stats`` the
+    closure additionally returns the shard-mean block-prune fraction.
     """
     axis_names = tuple(axis_names or mesh.axis_names)
 
+    from repro.dist.compat import shard_map
+
     @functools.partial(jax.jit, static_argnames=("k",))
     def run(index: BlockIndex, queries: Array, k: int):
-        fn = jax.shard_map(
-            functools.partial(sharded_search_local, k=k, axis_names=axis_names),
+        fn = shard_map(
+            functools.partial(sharded_search_local, k=k, axis_names=axis_names,
+                              warm_start=warm_start, best_first=best_first,
+                              with_stats=with_stats),
             mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(axis_names), index), P()),
-            out_specs=P(),
+            out_specs=(P(), P(), P()) if with_stats else (P(), P()),
             check_vma=False,
         )
         return fn(index, queries)

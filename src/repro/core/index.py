@@ -22,6 +22,11 @@ In this pure-JAX module the pruned matmul is still *computed* and masked
 (XLA has no data-dependent skip) — the pruning statistics report what a real
 TPU run skips; :mod:`repro.kernels.cosine_topk` is the Pallas kernel that
 actually skips the work via ``@pl.when``.
+
+The search entry points here are deprecated shims: the inner loops now live
+behind :class:`repro.search.SearchEngine` (one backend-dispatched API with
+τ warm-start and best-first block ordering); this module keeps the index
+*structure* (build, bounds, reorder).
 """
 from __future__ import annotations
 
@@ -35,7 +40,8 @@ from jax import Array
 from repro.core.bounds import ub_mult
 from repro.core.pivots import normalize, select_pivots_maxmin, select_pivots_random
 
-__all__ = ["BlockIndex", "build_index", "search", "search_brute", "interval_upper_bound"]
+__all__ = ["BlockIndex", "build_index", "search", "search_brute",
+           "interval_upper_bound", "block_upper_bound", "reorder_perm"]
 
 
 class BlockIndex(NamedTuple):
@@ -106,12 +112,7 @@ def build_index(
     dp = dbn @ pivots.T                        # [n_pad, P]
 
     if reorder:
-        nearest = jnp.argmax(dp, axis=1)
-        near_sim = jnp.max(dp, axis=1)
-        # padding sorts to the end; valid rows: by (nearest pivot, -sim)
-        sort_key = jnp.where(valid, nearest.astype(jnp.float32) * 4.0 - near_sim,
-                             jnp.inf)
-        perm = jnp.argsort(sort_key)
+        perm = reorder_perm(dp, valid, n_pivots)
         dbn, dp = dbn[perm], dp[perm]
         valid, row_ids = valid[perm], row_ids[perm]
     # Padding rows are zero vectors => dp = 0; exclude them from the block
@@ -129,6 +130,24 @@ def build_index(
     dp_min = jnp.where(empty, 0.0, dp_min)
     dp_max = jnp.where(empty, 0.0, dp_max)
     return BlockIndex(dbn, dp, pivots, dp_min, dp_max, valid, row_ids)
+
+
+def reorder_perm(dp: Array, valid: Array, n_pivots: int) -> Array:
+    """Row permutation making blocks angularly coherent.
+
+    Sorts by (nearest pivot asc, similarity to it desc), padding last —
+    lexicographically, with the integer group key kept integer.  The old
+    float key ``nearest * 4.0 - near_sim`` packed both into one fp32: at
+    ``n_pivots = 64`` the key magnitude (~256) costs 8 bits of the
+    similarity's mantissa, so within-group sims closer than ~3e-5 collapsed
+    and the within-group descending order broke (regression-tested in
+    tests/test_index.py).
+    """
+    nearest = jnp.argmax(dp, axis=1).astype(jnp.int32)
+    near_sim = jnp.max(dp, axis=1)
+    group = jnp.where(valid, nearest, n_pivots)   # padding after every group
+    # lexsort: last key is primary
+    return jnp.lexsort((-near_sim, group))
 
 
 def interval_upper_bound(qp: Array, lo: Array, hi: Array) -> Array:
@@ -153,7 +172,6 @@ def block_upper_bound(qp: Array, dp_min: Array, dp_max: Array) -> Array:
     return per_pivot.min(axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "prune", "element_stats"))
 def search(
     index: BlockIndex,
     queries: Array,
@@ -163,9 +181,11 @@ def search(
     margin: float = 4e-7,
     element_stats: bool = False,
 ):
-    """Exact top-k cosine search with block-level bound pruning.
+    """Deprecated: use :class:`repro.search.SearchEngine`.
 
-    Returns ``(sims [m,k] f32, idx [m,k] i32, stats)`` where stats is a dict:
+    Thin shim over the unified runtime's ``scan`` backend, preserving the
+    historical signature and stats dict (natural block order, no τ
+    warm-start).  Returns ``(sims [m,k] f32, idx [m,k] i32, stats)``:
       ``block_prune_frac``   fraction of (query, block) pairs skipped,
       ``elem_prune_frac``    fraction of (query, point) pairs whose individual
                              Eq. 13 bound also prunes them (only if
@@ -173,51 +193,14 @@ def search(
                              pruning available to a scalar CPU index).
     The result is exact: identical set to brute force (see tests).
     """
-    qn = normalize(jnp.asarray(queries, jnp.float32))
-    m = qn.shape[0]
-    qp = qn @ index.pivots.T                                  # [m, P]
-    nb, bs = index.n_blocks, index.block_size
-    db_blocks = index.db.reshape(nb, bs, -1)
-    dp_blocks = index.dp.reshape(nb, bs, -1)
-    valid_blocks = index.valid.reshape(nb, bs)
-    base_idx = (jnp.arange(nb)[:, None] * bs + jnp.arange(bs)[None, :]).astype(jnp.int32)
-
-    init = (
-        jnp.full((m, k), -jnp.inf, jnp.float32),              # top sims
-        jnp.full((m, k), -1, jnp.int32),                      # top idx
-        jnp.zeros((), jnp.float32),                           # pruned block pairs
-        jnp.zeros((), jnp.float32),                           # pruned elem pairs
-    )
-
-    def step(carry, xs):
-        top_s, top_i, blk_pruned, elem_pruned, = carry
-        blk, dpb, vb, bidx, lo, hi = xs
-        tau = top_s[:, -1]                                    # [m] current kth best
-        if prune:
-            ub = block_upper_bound(qp, lo, hi)                # [m]
-            needed = ub + margin >= tau
-        else:
-            needed = jnp.ones((m,), bool)
-        # Exact scores (masked; the Pallas kernel skips this work entirely).
-        scores = qn @ blk.T                                   # [m, bs]
-        scores = jnp.where(vb[None, :], scores, -jnp.inf)
-        scores = jnp.where(needed[:, None], scores, -jnp.inf)
-        cand_s = jnp.concatenate([top_s, scores], axis=1)
-        cand_i = jnp.concatenate([top_i, jnp.broadcast_to(bidx[None, :], (m, bs))], axis=1)
-        new_s, pos = jax.lax.top_k(cand_s, k)
-        new_i = jnp.take_along_axis(cand_i, pos, axis=1)
-        blk_pruned = blk_pruned + (~needed).sum().astype(jnp.float32)
-        if element_stats:
-            eub = jnp.min(ub_mult(qp[:, None, :], dpb[None, :, :]), axis=-1)  # [m, bs]
-            elem_pruned = elem_pruned + (
-                ((eub + margin < tau[:, None]) & vb[None, :]).sum().astype(jnp.float32)
-            )
-        return (new_s, new_i, blk_pruned, elem_pruned), None
-
-    xs = (db_blocks, dp_blocks, valid_blocks, base_idx, index.dp_min, index.dp_max)
-    (top_s, top_i, blk_pruned, elem_pruned), _ = jax.lax.scan(step, init, xs)
-    # map padded/reordered positions back to original row ids
-    top_i = jnp.where(top_i >= 0, index.row_ids[jnp.maximum(top_i, 0)], -1)
+    from repro.search.backends import (map_row_ids, prep_queries,
+                                       scan_search)
+    qn, qp = prep_queries(index, queries)
+    top_s, pos, blk_pruned, elem_pruned = scan_search(
+        index, qn, qp, k, prune=prune, margin=margin,
+        warm_start=False, best_first=False, element_stats=element_stats)
+    top_i = map_row_ids(index.row_ids, pos)
+    m, nb = qn.shape[0], index.n_blocks
     n_valid = index.valid.sum()
     stats = {
         "block_prune_frac": blk_pruned / (m * nb),

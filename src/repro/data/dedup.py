@@ -11,8 +11,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import build_index, search
 from repro.core.pivots import normalize
+from repro.search import SearchEngine
 
 
 def embed_tokens(tokens: np.ndarray, dim: int = 256, seed: int = 0) -> np.ndarray:
@@ -34,8 +34,8 @@ def find_near_duplicates(embeddings: np.ndarray, *, threshold: float = 0.95,
                          block_size: int = 128):
     """Return (pairs [(i, j), ...] with i<j and sim>=threshold, stats)."""
     emb = jnp.asarray(embeddings, jnp.float32)
-    idx = build_index(emb, n_pivots=n_pivots, block_size=block_size)
-    sims, ids, stats = search(idx, emb, k + 1)   # +1: self-match
+    eng = SearchEngine.build(emb, n_pivots=n_pivots, block_size=block_size)
+    sims, ids, stats = eng.search(emb, k + 1)    # +1: self-match
     sims, ids = np.asarray(sims), np.asarray(ids)
     pairs = set()
     for i in range(len(emb)):
@@ -43,7 +43,7 @@ def find_near_duplicates(embeddings: np.ndarray, *, threshold: float = 0.95,
             if j < 0 or j == i or s < threshold:
                 continue
             pairs.add((min(i, int(j)), max(i, int(j))))
-    return sorted(pairs), {k_: float(v) for k_, v in stats.items()}
+    return sorted(pairs), stats
 
 
 def dedup_mask(n: int, pairs) -> np.ndarray:

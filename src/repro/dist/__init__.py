@@ -1,0 +1,9 @@
+"""Distribution utilities: logical-axis sharding rules, tiny collectives,
+and elastic mesh reconstruction.
+
+  sharding    — logical-name -> mesh-axis rules + ``shard`` constraint hints
+  collectives — small exact-search collectives (top-k all-gather merge)
+  elastic     — rebuild a mesh from surviving devices after node loss
+  compat      — jax.shard_map API shim for older JAX versions
+"""
+from repro.dist import collectives, compat, elastic, sharding  # noqa: F401

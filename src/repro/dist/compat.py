@@ -1,0 +1,58 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern ``jax.shard_map`` API (``check_vma`` /
+``axis_names``); older installed versions only have
+``jax.experimental.shard_map.shard_map`` (``check_rep`` / ``auto``).
+:func:`shard_map` papers over the difference so call sites stay on the
+modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "optimization_barrier"]
+
+
+@jax.custom_vjp
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` with a differentiation rule.
+
+    Newer JAX differentiates the barrier natively (barrier on the
+    cotangents); older versions raise NotImplementedError inside grad —
+    this wrapper supplies that same rule everywhere.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return optimization_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+optimization_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """``jax.shard_map`` with fallback to the experimental API.
+
+    ``axis_names`` selects the manual axes (partial-manual mode); on old
+    JAX this maps to ``auto = mesh axes - axis_names``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check_vma)
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, **kw)

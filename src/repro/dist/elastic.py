@@ -1,0 +1,36 @@
+"""Elastic mesh reconstruction after node loss.
+
+Checkpoints store full (unsharded) arrays, so a restore only needs *some*
+valid mesh over the surviving devices; :func:`remesh` builds the largest
+(data, model) mesh the survivors support, preferring to keep the model axis
+at its previous width so TP layouts stay stable.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["best_mesh", "remesh"]
+
+
+def best_mesh(n: int, *, prefer_model: int | None = None) -> tuple[int, int]:
+    """(data, model) shape for ``n`` surviving devices.
+
+    ``model`` is the largest divisor of ``n`` that is ``<= prefer_model``
+    (default: the most square split, ``floor(sqrt(n))``); the rest becomes
+    the data axis.  Always satisfies ``data * model == n``.
+    """
+    if n <= 0:
+        raise ValueError("best_mesh needs at least one device")
+    if prefer_model is None:
+        prefer_model = int(n ** 0.5)
+    cap = max(1, min(prefer_model, n))
+    model = max(d for d in range(1, cap + 1) if n % d == 0)
+    return n // model, model
+
+
+def remesh(devices, *, prefer_model: int | None = None) -> Mesh:
+    """Build a ("data", "model") mesh over the surviving ``devices``."""
+    devices = list(devices)
+    data, model = best_mesh(len(devices), prefer_model=prefer_model)
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))

@@ -1,0 +1,178 @@
+"""Logical-axis sharding rules (GSPMD constraint hints).
+
+Model code never names mesh axes directly; it annotates activations with
+*logical* axis names (``shd.shard(x, "batch", None, "heads", None)``) and
+parameters are placed by :func:`param_spec`.  A rule table set once per
+process (:func:`set_rules`) maps logical names to mesh axes; with no rules
+active every annotation is a no-op, so the same model code runs unsharded
+on a laptop and TP/FSDP-sharded on a pod.
+
+Rules are plain data (``dict[str, str | tuple | None]``), so launchers can
+tweak them (pure-DP ablations, serve-mode TP-resident weights) without
+touching model code.  :func:`sanitize` drops axes that do not divide the
+array dimension — annotations degrade to replication instead of erroring,
+which is what makes smoke configs with tiny head counts runnable on any
+mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "set_rules", "active", "get_mesh", "rule", "default_rules",
+    "shard", "sanitize", "param_spec", "path_name",
+]
+
+_MESH: Mesh | None = None
+_RULES: dict[str, Any] | None = None
+
+
+def set_rules(mesh: Mesh | None, rules: dict | None) -> None:
+    """Install (or clear, with ``None, None``) the process-wide rule table."""
+    global _MESH, _RULES
+    _MESH = mesh
+    _RULES = rules
+
+
+def active() -> bool:
+    return _MESH is not None and _RULES is not None
+
+
+def get_mesh() -> Mesh | None:
+    return _MESH
+
+
+def rule(name: str):
+    """Mesh axis (or axes tuple) for a logical name; None when unmapped."""
+    if _RULES is None:
+        return None
+    return _RULES.get(name)
+
+
+def default_rules(*, fsdp: bool = False, multi_pod: bool = False,
+                  pure_dp: bool = False) -> dict:
+    """The standard rule table.
+
+    ``fsdp`` additionally shards parameters over the data axes (one dim per
+    param, picked by :func:`param_spec`).  ``pure_dp`` unmaps every model
+    dimension (data parallelism only — the MoE ablation path).
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    model = None if pure_dp else "model"
+    return {
+        "batch": dp,
+        "heads": model,
+        "kv_heads": model,
+        "ffn": model,
+        "vocab": model,
+        "model_embed": None,      # activations stay replicated on d_model
+        "expert_ffn": model,
+        "fsdp": dp if fsdp else None,
+    }
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _axes_in_mesh(mesh: Mesh, axes):
+    if axes is None:
+        return None
+    tup = (axes,) if isinstance(axes, str) else tuple(axes)
+    tup = tuple(a for a in tup if a in mesh.axis_names)
+    if not tup:
+        return None
+    return tup[0] if len(tup) == 1 else tup
+
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh axes are absent or do not divide the dim.
+
+    Annotations degrade gracefully to replication — never an XLA error.
+    """
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim_size, axes in zip(shape, dims):
+        axes = _axes_in_mesh(mesh, axes)
+        if axes is not None and dim_size % _axes_size(mesh, axes) != 0:
+            axes = None
+        out.append(axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x, *names):
+    """Constrain ``x`` so dim ``i`` shards over the mesh axes of logical name
+    ``names[i]`` (None = replicated).  No-op when no rules are active."""
+    if not active():
+        return x
+    spec = P(*[rule(n) if n else None for n in names])
+    spec = sanitize(spec, x.shape, _MESH)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter placement
+# ---------------------------------------------------------------------------
+
+def path_name(path) -> str:
+    """jax tree key-path -> "a/b/0/c" string."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+#: parameter leaf names whose LAST dim is tensor-parallel (column parallel)
+_TP_LAST = {"wq", "wk", "wv", "up", "gate", "wg", "in_proj", "w"}
+#: parameter leaf names whose SECOND-TO-LAST dim is tensor-parallel (row par.)
+_TP_FIRST = {"wo", "down", "out_proj"}
+
+
+def param_spec(path, shape) -> P:
+    """PartitionSpec for one parameter leaf (TP by name + optional FSDP).
+
+    Works on both flat and scan-stacked ([L, ...]) parameters because only
+    the trailing dims are matched.  The result still goes through
+    :func:`sanitize` at placement time, so non-divisible dims replicate.
+    """
+    name = path_name(path)
+    leaf = name.rsplit("/", 1)[-1]
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    model = rule("heads") or rule("ffn")
+    if model is not None and ndim >= 2:
+        if "embed" in name or "lm_head" in name:
+            vocab = rule("vocab")
+            if vocab is not None:
+                # tok_embed [V, D] -> dim -2; lm_head/w [D, V] -> dim -1
+                spec[-2 if "embed" in name else -1] = vocab
+        elif leaf in _TP_LAST or any(s in name for s in ("experts/up",
+                                                         "experts/gate")):
+            spec[-1] = model
+        elif leaf in _TP_FIRST or "experts/down" in name:
+            spec[-2] = model
+    fsdp_axes = rule("fsdp")
+    if fsdp_axes is not None and _MESH is not None:
+        size = _axes_size(_MESH, fsdp_axes)
+        for dim in range(ndim):
+            if spec[dim] is None and shape[dim] % size == 0 and shape[dim] > 1:
+                spec[dim] = fsdp_axes
+                break
+    return P(*spec)

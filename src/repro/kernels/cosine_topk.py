@@ -40,12 +40,17 @@ _NEG_INF = float("-inf")
 
 
 def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool):
-    def kernel(nvalid_ref, tau_ref, qn_ref, db_ref, qp_ref, lo_ref, hi_ref,
+    def kernel(order_ref, nvalid_ref, tau_ref, qn_ref, db_ref, qp_ref,
+               lo_ref, hi_ref,
                top_s_out, top_i_out, computed_ref,
                top_s, top_i):
         i = pl.program_id(0)
         j = pl.program_id(1)
         nj = pl.num_programs(1)
+        # best-first: step j of query tile i visits db tile order[i, j]
+        # (the BlockSpec index maps fetched that tile; this is the global
+        # column base for id bookkeeping)
+        jb = order_ref[i, j]
 
         @pl.when(j == 0)
         def _init():
@@ -84,7 +89,7 @@ def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool):
                 qn, db, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32,
             )                                             # [BM, BN]
-            col = j * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+            col = jb * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
             scores = jnp.where(col < nvalid_ref[0, 0], scores, _NEG_INF)  # db pad
             cand_s = jnp.concatenate([top_s[...], scores], axis=1)
             cand_i = jnp.concatenate([top_i[...], col], axis=1)
@@ -125,6 +130,7 @@ def pruned_topk(
     n_valid: Array | int,
     m_valid: Array | int | None = None,
     tau_init: Array | None = None,
+    block_order: Array | None = None,
     *,
     k: int,
     bm: int = DEFAULT_BM,
@@ -140,12 +146,21 @@ def pruned_topk(
       db:      [N, D] L2-normalized database (padding rows at the END).
       qp:      [M, P] query-pivot similarities.
       dp_min/dp_max: [N // bn, P] pivot intervals at KERNEL tile granularity
-               (use :func:`repro.kernels.ops.coarsen_intervals`).
+               (use :func:`repro.search.backends.coarsen_intervals`).
       n_valid: number of real rows in db.
+      tau_init: [M] optional τ warm-start seeds (true lower bounds on each
+               query's k-th best; see SearchEngine).
+      block_order: [M_tiles, N_tiles] i32 optional per-query-tile db tile
+               visiting order (best-first).  Scalar-prefetched: the
+               BlockSpec index maps read it, so a pruned tile's HBM->VMEM
+               copy targets the *bound-ordered* tile, and sequential steps
+               see monotonically less useful tiles — τ rises early.
+               Identity order when None.
       k:       top-k (k <= bn).
 
     Returns (sims [M, k] f32, idx [M, k] i32 positions into db,
-    computed [M_tiles, N_tiles] i32 — which tiles did real work).
+    computed [M_tiles, N_tiles] i32 — which db tiles did real work, indexed
+    by TILE id, not visit step).
     """
     m, d = qn.shape
     n = db.shape[0]
@@ -168,34 +183,44 @@ def pruned_topk(
         tau = jnp.pad(tau_init.reshape(m, 1).astype(jnp.float32) - 1e-6,
                       ((0, mp - m), (0, 0)), constant_values=_NEG_INF)
     grid = (mp // bm, n // bn)
+    if block_order is None:
+        block_order = jnp.broadcast_to(
+            jnp.arange(grid[1], dtype=jnp.int32)[None, :], grid)
+    block_order = block_order.astype(jnp.int32)
+    assert block_order.shape == grid, (block_order.shape, grid)
     kern = _make_kernel(k, bm, bn, margin, prune)
     out_shape = [
         jax.ShapeDtypeStruct((mp, k), jnp.float32),
         jax.ShapeDtypeStruct((mp, k), jnp.int32),
         jax.ShapeDtypeStruct(grid, jnp.int32),
     ]
-    top_s, top_i, computed = pl.pallas_call(
-        kern,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                                # block_order
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),            # n_valid, m_valid
-            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),           # tau seeds
-            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),           # qn
-            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),           # db
-            pl.BlockSpec((bm, p), lambda i, j: (i, 0)),           # qp
-            pl.BlockSpec((1, p), lambda i, j: (j, 0)),            # lo
-            pl.BlockSpec((1, p), lambda i, j: (j, 0)),            # hi
+            pl.BlockSpec((1, 2), lambda i, j, ord_: (0, 0)),  # n_valid, m_valid
+            pl.BlockSpec((bm, 1), lambda i, j, ord_: (i, 0)),  # tau seeds
+            pl.BlockSpec((bm, d), lambda i, j, ord_: (i, 0)),  # qn
+            pl.BlockSpec((bn, d), lambda i, j, ord_: (ord_[i, j], 0)),  # db
+            pl.BlockSpec((bm, p), lambda i, j, ord_: (i, 0)),  # qp
+            pl.BlockSpec((1, p), lambda i, j, ord_: (ord_[i, j], 0)),   # lo
+            pl.BlockSpec((1, p), lambda i, j, ord_: (ord_[i, j], 0)),   # hi
         ],
         out_specs=[
-            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, k), lambda i, j, ord_: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j, ord_: (i, 0)),
+            # computed is indexed by the VISITED tile id, not the step
+            pl.BlockSpec((1, 1), lambda i, j, ord_: (i, ord_[i, j])),
         ],
-        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bm, k), jnp.float32),
             pltpu.VMEM((bm, k), jnp.int32),
         ],
+    )
+    top_s, top_i, computed = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(nv, tau, qn_p, db, qp_p, dp_min, dp_max)
+    )(block_order, nv, tau, qn_p, db, qp_p, dp_min, dp_max)
     return top_s[:m], top_i[:m], computed

@@ -1,35 +1,25 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Deprecated jit'd wrappers around the Pallas kernels.
 
-``searcher`` bridges a :class:`repro.core.index.BlockIndex` to the fused
-kernel: it coarsens the index's per-block pivot intervals to kernel-tile
-granularity, normalizes the queries, and maps results back to original row
-ids.  On CPU (this container) the kernels run with ``interpret=True``; on
-TPU the same calls compile to Mosaic.
+The kernel search path moved into the unified runtime:
+:class:`repro.search.SearchEngine` with ``backend="kernel"`` (or the raw
+inner loop :func:`repro.search.backends.kernel_search`).  This module keeps
+the old entry points alive for existing callers; new code should go through
+the engine, which adds τ warm-start and best-first block ordering on top.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
 import jax
-import jax.numpy as jnp
 from jax import Array
 
 from repro.core.index import BlockIndex
-from repro.core.pivots import normalize
-from repro.kernels import bound_prune, cosine_topk
+from repro.kernels import bound_prune, cosine_topk  # noqa: F401  (re-export)
+from repro.search.backends import coarsen_intervals  # noqa: F401  (moved)
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
-
-
-def coarsen_intervals(dp_min: Array, dp_max: Array, factor: int):
-    """Merge ``factor`` consecutive index blocks into one kernel tile."""
-    nb, p = dp_min.shape
-    assert nb % factor == 0, (nb, factor)
-    lo = dp_min.reshape(nb // factor, factor, p).min(axis=1)
-    hi = dp_max.reshape(nb // factor, factor, p).max(axis=1)
-    return lo, hi
 
 
 def block_bounds(qp: Array, dp_min: Array, dp_max: Array, *, interpret=None) -> Array:
@@ -39,10 +29,6 @@ def block_bounds(qp: Array, dp_min: Array, dp_max: Array, *, interpret=None) -> 
     return bound_prune.block_bounds(qp, dp_min, dp_max, interpret=interpret)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "bm", "bn", "prune", "sort_queries",
-                              "warm_start", "interpret")
-)
 def search_index(
     index: BlockIndex,
     queries: Array,
@@ -53,62 +39,25 @@ def search_index(
     prune: bool = True,
     sort_queries: bool = True,
     warm_start: bool = False,
+    best_first: bool = False,
     interpret: bool | None = None,
 ):
-    """Kernel-backed exact top-k over a BlockIndex.
+    """Deprecated: use ``SearchEngine(index, backend="kernel")``.
 
-    Returns (sims [m,k], original row ids [m,k], computed_tile_frac scalar).
-    Functionally identical to :func:`repro.core.index.search` (tested), but
-    the pruned tiles genuinely skip their matmul.
-
-    ``sort_queries`` (beyond-paper): the kernel prunes a db tile only when
-    *no* query in the BM-row query tile needs it, so mixed batches defeat
-    pruning.  Grouping queries by their nearest pivot makes query tiles
-    angularly coherent; results are unsorted back before returning.
+    Returns (sims [m,k], original row ids [m,k], computed_tile_frac scalar)
+    exactly as before; defaults preserve the historical behavior
+    (warm-start and best-first off).
     """
-    if interpret is None:
-        interpret = _on_cpu()
-    n_pad = index.db.shape[0]
-    ibs = index.block_size
-    if bn is None:
-        bn = ibs if ibs % 128 == 0 else ibs * max(1, -(-128 // ibs))
-    # kernel tile must be a multiple of the index block size dividing n_pad
-    while n_pad % bn or bn % ibs:
-        bn //= 2
-        if bn < ibs:
-            bn = ibs
-            break
-    factor = bn // ibs
-    lo, hi = coarsen_intervals(index.dp_min, index.dp_max, factor)
-    qn = normalize(jnp.asarray(queries, jnp.float32))
-    qp = qn @ index.pivots.T
-    if sort_queries:
-        key = jnp.argmax(qp, axis=1).astype(jnp.float32) * 4.0 - jnp.max(qp, axis=1)
-        perm = jnp.argsort(key)
-        qn, qp = qn[perm], qp[perm]
-    n_valid = index.valid.sum().astype(jnp.int32)
-    tau_init = None
-    if warm_start:
-        # tau warm-start (beyond-paper): pre-scan each query's best-bound
-        # block to seed the kernel's k-th-best threshold.  Cost: one
-        # [m, bn] x d matmul; exactness unaffected (tau is a true lower
-        # bound achieved by k real candidates of that block).
-        from repro.kernels import ref as kref
-        ub = kref.block_bounds(qp, lo, hi)                   # [m, NB]
-        best = jnp.argmax(ub, axis=1)                        # [m]
-        blk = index.db.reshape(-1, bn, index.db.shape[-1])[best]   # [m,bn,d]
-        vmask = index.valid.reshape(-1, bn)[best]            # [m, bn]
-        scores = jnp.einsum("md,mbd->mb", qn, blk)
-        scores = jnp.where(vmask, scores, -jnp.inf)
-        kk = min(k, bn)
-        tau_init = jax.lax.top_k(scores, kk)[0][:, -1]
-        tau_init = jnp.where(jnp.isfinite(tau_init), tau_init, -jnp.inf)
-    sims, pos, computed = cosine_topk.pruned_topk(
-        qn, index.db, qp, lo, hi, n_valid, tau_init=tau_init,
-        k=k, bm=bm, bn=bn, prune=prune, interpret=interpret,
-    )
-    if sort_queries:
-        inv = jnp.argsort(perm)
-        sims, pos = sims[inv], pos[inv]
-    ids = jnp.where(pos >= 0, index.row_ids[jnp.maximum(pos, 0)], -1)
+    warnings.warn(
+        "repro.kernels.ops.search_index is deprecated; use "
+        "repro.search.SearchEngine(index, backend='kernel')",
+        DeprecationWarning, stacklevel=2)
+    from repro.search.backends import (kernel_search, map_row_ids,
+                                       prep_queries)
+    qn, qp = prep_queries(index, queries)
+    sims, pos, computed = kernel_search(
+        index, qn, qp, k, bm=bm, bn=bn, prune=prune,
+        sort_queries=sort_queries, warm_start=warm_start,
+        best_first=best_first, interpret=interpret)
+    ids = map_row_ids(index.row_ids, pos)
     return sims, ids, computed.mean()

@@ -22,6 +22,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--knn", action="store_true", help="enable kNN-LM")
+    ap.add_argument("--search-backend", default="auto",
+                    choices=["auto", "scan", "kernel", "brute"],
+                    help="SearchEngine backend for the datastore "
+                         "(sharded needs a mesh launcher, not this driver)")
     ap.add_argument("--lmbda", type=float, default=0.25)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
@@ -41,8 +45,10 @@ def main(argv=None):
                   for s in range(4)]
         t0 = time.perf_counter()
         knn = KNNDatastore.from_corpus(fns, params, corpus, cfg.vocab, k=8,
-                                       n_pivots=8, block_size=64)
-        print(f"datastore: {knn.index.db.shape[0]} keys "
+                                       n_pivots=8, block_size=64,
+                                       backend=args.search_backend)
+        print(f"datastore: {knn.index.db.shape[0]} keys, "
+              f"backend={knn.engine.backend_name} "
               f"({time.perf_counter() - t0:.1f}s to build)")
 
     eng = Engine(fns, params, max_seq=args.prompt_len + args.gen + 8,

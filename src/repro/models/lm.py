@@ -65,7 +65,8 @@ def _block_apply(btype: str, p, x: Array, cfg: ModelConfig, *,
     # (f32[L,B,S,D] instead of bf16 -> 2x residual memory; observed on the
     # qwen2-72b train_4k dry-run, EXPERIMENTS.md §Perf).
     if cache is None:
-        x = jax.lax.optimization_barrier(x)
+        from repro.dist.compat import optimization_barrier
+        x = optimization_barrier(x)
     aux = jnp.zeros((), jnp.float32)
     if btype in ("attn", "moe"):
         h = norm_apply(p["ln1"], x, cfg)

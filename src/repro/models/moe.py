@@ -158,7 +158,8 @@ def _moe_sharded(p, x: Array, cfg: ModelConfig, *, no_drop: bool = False):
             aux = jax.lax.pmean(aux, dp_axes)
         return y.reshape(B, S, D), aux
 
-    fn = jax.shard_map(
+    from repro.dist.compat import shard_map
+    fn = shard_map(
         local, mesh=mesh, in_specs=in_specs,
         out_specs=(P(dp_axes, None, None), P()),
         axis_names=manual, check_vma=False,

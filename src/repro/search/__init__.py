@@ -1,0 +1,14 @@
+"""Unified search runtime: one backend-dispatched exact-cosine-kNN API.
+
+  engine   — :class:`SearchEngine` facade (normalization, τ warm-start,
+             best-first ordering, stats, id mapping)
+  backends — registry + the ``scan`` / ``kernel`` / ``sharded`` / ``brute``
+             inner loops
+  stats    — the one :class:`SearchStats` dataclass every path returns
+
+See DESIGN.md §3 for the backend contract.
+"""
+from repro.search.backends import (available_backends, get_backend,  # noqa: F401
+                                   register_backend)
+from repro.search.engine import SearchEngine, auto_backend  # noqa: F401
+from repro.search.stats import SearchStats  # noqa: F401

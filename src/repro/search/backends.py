@@ -1,0 +1,392 @@
+"""Search backends: the bare inner loops behind :class:`SearchEngine`.
+
+Every backend implements one method::
+
+    run(engine, queries, k, *, prune, element_stats)
+        -> (sims [m, k] f32, ids [m, k] i32 original row ids, raw stats dict)
+
+and registers itself under a name with :func:`register_backend`.  The
+engine owns everything else — query normalization, pivot-similarity
+computation, τ warm-start policy, best-first ordering policy, id mapping,
+and :class:`~repro.search.stats.SearchStats` assembly — so a backend is
+only its compute strategy:
+
+  ``scan``    pure-JAX ``lax.scan`` over blocks (masked matmuls; portable)
+  ``kernel``  fused Pallas kernel (``@pl.when``-skipped tiles; TPU-native)
+  ``sharded`` per-device scan + tiny all-gather top-k merge (mesh required)
+  ``brute``   full matmul + top-k (baseline / tiny datastores)
+
+The shared jitted helpers here (τ warm-start seeding, best-first block
+permutation) are what the refactor lifted out of the kernel-only path so
+that *every* backend benefits — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.bounds import ub_mult
+from repro.core.index import BlockIndex, block_upper_bound
+from repro.core.pivots import normalize
+from repro.kernels import cosine_topk
+from repro.kernels import ref as kref
+
+__all__ = [
+    "register_backend", "get_backend", "available_backends",
+    "prep_queries", "map_row_ids", "scan_search", "kernel_search",
+    "brute_search", "tau_warm_start", "coarsen_intervals",
+]
+
+_REGISTRY: dict[str, object] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a backend under ``name`` (instantiated)."""
+    def deco(cls):
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def get_backend(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown search backend {name!r}; "
+            f"registered: {available_backends()}") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# shared jitted pieces (engine-owned plumbing)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def prep_queries(index: BlockIndex, queries: Array):
+    """Normalize queries and compute query-pivot similarities once."""
+    qn = normalize(jnp.asarray(queries, jnp.float32))
+    return qn, qn @ index.pivots.T
+
+
+@jax.jit
+def map_row_ids(row_ids: Array, pos: Array) -> Array:
+    """Padded/reordered positions -> original row ids (-1 stays -1)."""
+    return jnp.where(pos >= 0, row_ids[jnp.maximum(pos, 0)], -1)
+
+
+def coarsen_intervals(dp_min: Array, dp_max: Array, factor: int):
+    """Merge ``factor`` consecutive index blocks into one kernel tile."""
+    nb, p = dp_min.shape
+    assert nb % factor == 0, (nb, factor)
+    lo = dp_min.reshape(nb // factor, factor, p).min(axis=1)
+    hi = dp_max.reshape(nb // factor, factor, p).max(axis=1)
+    return lo, hi
+
+
+def tau_warm_start(qn: Array, db_blocks: Array, valid_blocks: Array,
+                   ub: Array, k: int) -> Array:
+    """Seed each query's running k-th-best with its best-bound block.
+
+    One cheap ``[m, bs] x d`` matmul: exact-score the single block whose
+    Eq. 13 upper bound is highest for this query and take the k-th best.
+    The seed is a true lower bound on the final τ *achieved by k real
+    candidates of that block*, so seeding every top-k slot with it (minus
+    an ulp so ties displace seeds) cannot evict a true neighbor.  Queries
+    whose best block holds < k valid rows get -inf (no seeding).
+
+    Caller must guarantee ``block rows >= k`` (static); ``ub`` is [m, nb]
+    at the same block granularity as ``db_blocks`` [nb, bs, d].
+    """
+    best = jnp.argmax(ub, axis=1)                       # [m]
+    blk = db_blocks[best]                               # [m, bs, d]
+    vb = valid_blocks[best]                             # [m, bs]
+    scores = jnp.einsum("md,mbd->mb", qn, blk)
+    scores = jnp.where(vb, scores, -jnp.inf)
+    tau = jax.lax.top_k(scores, k)[0][:, -1]
+    return jnp.where(jnp.isfinite(tau), tau, -jnp.inf)
+
+
+def best_first_order(ub: Array) -> Array:
+    """Blocks permuted by descending upper bound, aggregated over queries.
+
+    ``ub`` [m, nb] -> [nb] i32 visiting order.  Aggregation is ``max`` over
+    the query tile: the block *any* query still needs comes first, which is
+    what drives every query's τ up fastest (DESIGN.md §3.2).
+    """
+    return jnp.argsort(-ub.max(axis=0)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# scan backend inner loop
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "prune", "warm_start", "best_first", "element_stats"),
+)
+def scan_search(
+    index: BlockIndex,
+    qn: Array,
+    qp: Array,
+    k: int,
+    *,
+    prune: bool = True,
+    margin: float = 4e-7,
+    warm_start: bool = False,
+    best_first: bool = False,
+    element_stats: bool = False,
+):
+    """Pure-JAX block scan (the portable backend; see DESIGN.md §2).
+
+    Returns ``(top_s [m,k], pos [m,k] padded-row positions, blk_pruned,
+    elem_pruned)`` — id mapping and stats normalization happen in the
+    engine.  Pruned matmuls are computed-and-masked (XLA has no
+    data-dependent skip); the kernel backend actually skips them.
+    """
+    m = qn.shape[0]
+    nb, bs = index.n_blocks, index.block_size
+    db_blocks = index.db.reshape(nb, bs, -1)
+    dp_blocks = index.dp.reshape(nb, bs, -1)
+    valid_blocks = index.valid.reshape(nb, bs)
+    base_idx = (jnp.arange(nb)[:, None] * bs
+                + jnp.arange(bs)[None, :]).astype(jnp.int32)
+
+    ub_all = None
+    if warm_start or best_first:
+        ub_all = kref.block_bounds(qp, index.dp_min, index.dp_max)  # [m, nb]
+
+    tau0 = jnp.full((m,), -jnp.inf, jnp.float32)
+    if warm_start and bs >= k:
+        tau0 = tau_warm_start(qn, db_blocks, valid_blocks, ub_all, k)
+
+    # when the bound matrix already exists (warm start / best-first), feed
+    # it through the scan instead of re-evaluating Eq. 13 per block
+    reuse_ub = prune and ub_all is not None
+    xs = (db_blocks, dp_blocks, valid_blocks, base_idx,
+          index.dp_min, index.dp_max)
+    if reuse_ub:
+        xs = xs + (ub_all.T,)                                 # [nb, m]
+    if best_first:
+        order = best_first_order(ub_all)
+        xs = tuple(a[order] for a in xs)
+
+    init = (
+        jnp.tile((tau0 - 1e-6)[:, None], (1, k)),             # seeded top sims
+        jnp.full((m, k), -1, jnp.int32),                      # top positions
+        jnp.zeros((), jnp.float32),                           # pruned pairs
+        jnp.zeros((), jnp.float32),                           # prunable elems
+    )
+
+    def step(carry, x):
+        top_s, top_i, blk_pruned, elem_pruned = carry
+        if reuse_ub:
+            blk, dpb, vb, bidx, lo, hi, ub = x                # ub: [m]
+        else:
+            blk, dpb, vb, bidx, lo, hi = x
+            ub = block_upper_bound(qp, lo, hi) if prune else None
+        tau = top_s[:, -1]                                    # running kth best
+        if prune:
+            needed = ub + margin >= tau
+        else:
+            needed = jnp.ones((m,), bool)
+        scores = qn @ blk.T                                   # [m, bs]
+        scores = jnp.where(vb[None, :], scores, -jnp.inf)
+        scores = jnp.where(needed[:, None], scores, -jnp.inf)
+        cand_s = jnp.concatenate([top_s, scores], axis=1)
+        cand_i = jnp.concatenate(
+            [top_i, jnp.broadcast_to(bidx[None, :], (m, bs))], axis=1)
+        new_s, sel = jax.lax.top_k(cand_s, k)
+        new_i = jnp.take_along_axis(cand_i, sel, axis=1)
+        blk_pruned = blk_pruned + (~needed).sum().astype(jnp.float32)
+        if element_stats:
+            eub = jnp.min(ub_mult(qp[:, None, :], dpb[None, :, :]), axis=-1)
+            elem_pruned = elem_pruned + (
+                ((eub + margin < tau[:, None]) & vb[None, :])
+                .sum().astype(jnp.float32))
+        return (new_s, new_i, blk_pruned, elem_pruned), None
+
+    (top_s, top_i, blk_pruned, elem_pruned), _ = jax.lax.scan(step, init, xs)
+    return top_s, top_i, blk_pruned, elem_pruned
+
+
+# ---------------------------------------------------------------------------
+# kernel backend wrapper
+# ---------------------------------------------------------------------------
+
+def _resolve_bn(index: BlockIndex, bn: int | None) -> int:
+    """Kernel tile size: a multiple of the index block size dividing n_pad."""
+    n_pad = index.db.shape[0]
+    ibs = index.block_size
+    if bn is None:
+        bn = ibs if ibs % 128 == 0 else ibs * max(1, -(-128 // ibs))
+    while n_pad % bn or bn % ibs:
+        bn //= 2
+        if bn < ibs:
+            bn = ibs
+            break
+    return bn
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "bm", "bn", "prune", "sort_queries", "warm_start",
+                     "best_first", "margin", "interpret"),
+)
+def kernel_search(
+    index: BlockIndex,
+    qn: Array,
+    qp: Array,
+    k: int,
+    *,
+    bm: int = cosine_topk.DEFAULT_BM,
+    bn: int | None = None,
+    prune: bool = True,
+    sort_queries: bool = True,
+    warm_start: bool = False,
+    best_first: bool = False,
+    margin: float = 4e-7,
+    interpret: bool | None = None,
+):
+    """Fused Pallas backend (see :mod:`repro.kernels.cosine_topk`).
+
+    Returns ``(sims [m,k], pos [m,k] padded-row positions, computed
+    [m_tiles, n_tiles])``.  ``sort_queries`` groups queries by nearest
+    pivot so BM-row tiles are angularly coherent (the kernel prunes a db
+    tile only when *no* query in the tile needs it); results are unsorted
+    before returning.  ``best_first`` hands the kernel a per-query-tile
+    block visiting order (scalar-prefetched index map).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bn = _resolve_bn(index, bn)
+    factor = bn // index.block_size
+    lo, hi = coarsen_intervals(index.dp_min, index.dp_max, factor)
+    m = qn.shape[0]
+    if sort_queries:
+        perm = jnp.lexsort((-jnp.max(qp, axis=1), jnp.argmax(qp, axis=1)))
+        qn, qp = qn[perm], qp[perm]
+    n_valid = index.valid.sum().astype(jnp.int32)
+
+    ub = None
+    if warm_start or best_first:
+        ub = kref.block_bounds(qp, lo, hi)                    # [m, n_tiles]
+    tau_init = None
+    if warm_start and bn >= k:
+        db_tiles = index.db.reshape(-1, bn, index.db.shape[-1])
+        valid_tiles = index.valid.reshape(-1, bn)
+        tau_init = tau_warm_start(qn, db_tiles, valid_tiles, ub, k)
+    block_order = None
+    if best_first:
+        mp = -(-m // bm) * bm
+        nt = lo.shape[0]
+        ub_p = jnp.pad(ub, ((0, mp - m), (0, 0)), constant_values=-jnp.inf)
+        tile_ub = ub_p.reshape(mp // bm, bm, nt).max(axis=1)  # [m_tiles, nt]
+        block_order = jnp.argsort(-tile_ub, axis=1).astype(jnp.int32)
+
+    sims, pos, computed = cosine_topk.pruned_topk(
+        qn, index.db, qp, lo, hi, n_valid,
+        tau_init=tau_init, block_order=block_order,
+        k=k, bm=bm, bn=bn, margin=margin, prune=prune, interpret=interpret,
+    )
+    if sort_queries:
+        inv = jnp.argsort(perm)
+        sims, pos = sims[inv], pos[inv]
+    return sims, pos, computed
+
+
+# ---------------------------------------------------------------------------
+# brute backend inner
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def brute_search(index: BlockIndex, qn: Array, k: int):
+    """Full matmul + top-k over the padded database (positions, not ids)."""
+    scores = qn @ index.db.T
+    scores = jnp.where(index.valid[None, :], scores, -jnp.inf)
+    sims, pos = jax.lax.top_k(scores, k)
+    return sims, pos.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the registered backends
+# ---------------------------------------------------------------------------
+
+@register_backend("scan")
+class ScanBackend:
+    """Portable pure-JAX block scan."""
+
+    name = "scan"
+
+    def run(self, eng, queries, k, *, prune=True, element_stats=False):
+        qn, qp = prep_queries(eng.index, queries)
+        s, pos, blk_pruned, elem_pruned = scan_search(
+            eng.index, qn, qp, k, prune=prune, margin=eng.margin,
+            warm_start=eng.warm_start, best_first=eng.best_first,
+            element_stats=element_stats)
+        ids = map_row_ids(eng.index.row_ids, pos)
+        m, nb = qn.shape[0], eng.index.n_blocks
+        # raw stats stay jnp scalars: engine.search converts to host floats
+        # only outside of tracing (lookup may run inside a decode jit)
+        raw = {"block_prune_frac": blk_pruned / (m * nb)}
+        if element_stats:
+            raw["elem_prune_frac"] = elem_pruned / (m * max(1, eng.n_valid))
+        return s, ids, raw
+
+
+@register_backend("kernel")
+class KernelBackend:
+    """Fused Pallas kernel (interpret mode off-TPU)."""
+
+    name = "kernel"
+
+    def run(self, eng, queries, k, *, prune=True, element_stats=False):
+        qn, qp = prep_queries(eng.index, queries)
+        s, pos, computed = kernel_search(
+            eng.index, qn, qp, k, bm=eng.bm, bn=eng.bn, prune=prune,
+            sort_queries=eng.sort_queries, warm_start=eng.warm_start,
+            best_first=eng.best_first, margin=eng.margin,
+            interpret=eng.interpret)
+        ids = map_row_ids(eng.index.row_ids, pos)
+        frac = computed.mean()
+        return s, ids, {"block_prune_frac": 1.0 - frac,
+                        "tile_computed_frac": frac}
+
+
+@register_backend("brute")
+class BruteBackend:
+    """Exact baseline: one big matmul, no pruning."""
+
+    name = "brute"
+
+    def run(self, eng, queries, k, *, prune=True, element_stats=False):
+        qn, _ = prep_queries(eng.index, queries)
+        s, pos = brute_search(eng.index, qn, k)
+        ids = map_row_ids(eng.index.row_ids, pos)
+        return s, ids, {"block_prune_frac": 0.0}
+
+
+@register_backend("sharded")
+class ShardedBackend:
+    """Mesh-sharded scan + all-gather top-k merge (needs ``mesh``)."""
+
+    name = "sharded"
+
+    def run(self, eng, queries, k, *, prune=True, element_stats=False):
+        if eng.mesh is None:
+            raise ValueError("the 'sharded' backend needs SearchEngine(mesh=...)")
+        fn = eng._sharded_fn
+        if fn is None:
+            from repro.core.distributed import make_sharded_search
+            fn = make_sharded_search(
+                eng.mesh, eng.axis_names, with_stats=True,
+                warm_start=eng.warm_start, best_first=eng.best_first)
+            eng._sharded_fn = fn
+        s, ids, frac = fn(eng.index, jnp.asarray(queries, jnp.float32), k)
+        return s, ids, {"block_prune_frac": frac}

@@ -1,0 +1,171 @@
+"""SearchEngine: one front door for every exact-cosine-search path.
+
+The paper's Eq. 13 bound is shared infrastructure; what used to differ per
+path (argument conventions, stats shapes, pruning plumbing, warm-start
+availability) is now owned here.  Backends (``scan`` / ``kernel`` /
+``sharded`` / ``brute``) are pluggable and auto-selected by device, mesh,
+and shape; each one is just an inner loop (see
+:mod:`repro.search.backends`).
+
+Usage::
+
+    eng = SearchEngine.build(db, n_pivots=16, block_size=128)
+    sims, ids, stats = eng.search(queries, k=10)
+    stats.block_prune_frac     # one SearchStats shape for every backend
+
+τ warm-start and best-first block ordering are engine policy (on by
+default) and apply to every backend that can use them — they only change
+*how fast τ rises*, never the result set, which stays bit-identical to
+brute force (property-tested in tests/test_search_engine.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.index import BlockIndex, build_index
+from repro.search import backends as _bk
+from repro.search.stats import SearchStats
+
+__all__ = ["SearchEngine", "auto_backend"]
+
+#: below this many padded rows the matmul is cheaper than any bookkeeping
+_BRUTE_MAX_ROWS = 256
+
+
+
+
+def auto_backend(index: BlockIndex, mesh=None) -> str:
+    """Pick a backend from device / mesh / shape.
+
+    sharded  — index carries a stacked shard axis (built by
+               ``build_sharded_index``) or a mesh was supplied;
+    brute    — tiny datastore (bound evaluation would dominate);
+    kernel   — on TPU, MXU-shaped work with VMEM-resident feature dim;
+    scan     — everywhere else (CPU/GPU, odd shapes): same pruning
+               semantics, XLA-portable.
+    """
+    if index.db.ndim == 3 or mesh is not None:
+        return "sharded"
+    n_pad, d = index.db.shape
+    if n_pad <= _BRUTE_MAX_ROWS:
+        return "brute"
+    if jax.default_backend() == "tpu" and d <= 4096:
+        return "kernel"
+    return "scan"
+
+
+class SearchEngine:
+    """Backend-dispatched exact top-k cosine search over a BlockIndex.
+
+    Args:
+      index: a :class:`BlockIndex` (or a shard-stacked one from
+        ``build_sharded_index`` together with ``mesh``).
+      backend: registered backend name, or ``"auto"`` (default).
+      mesh / axis_names: mesh placement for the ``sharded`` backend.
+      warm_start: seed each query's running k-th-best τ by exact-scoring
+        its single best-bound block before the main pass (every backend).
+      best_first: visit database blocks in descending upper-bound order
+        (per query tile) so τ rises early and later blocks prune.
+      margin: fp32 guard added to bounds before comparing with τ.
+      bm / bn / sort_queries / interpret: kernel-backend tile options
+        (ignored by other backends).
+    """
+
+    def __init__(
+        self,
+        index: BlockIndex,
+        *,
+        backend: str = "auto",
+        mesh=None,
+        axis_names=None,
+        warm_start: bool = True,
+        best_first: bool = True,
+        margin: float = 4e-7,
+        bm: int = 128,
+        bn: int | None = None,
+        sort_queries: bool = True,
+        interpret: bool | None = None,
+    ):
+        self.index = index
+        self.mesh = mesh
+        self.axis_names = axis_names
+        self.warm_start = warm_start
+        self.best_first = best_first
+        self.margin = margin
+        self.bm = bm
+        self.bn = bn
+        self.sort_queries = sort_queries
+        self.interpret = interpret
+        self._sharded_fn = None
+        self.backend_name = (auto_backend(index, mesh)
+                             if backend == "auto" else backend)
+        self.backend = _bk.get_backend(self.backend_name)
+        self.n_valid = int(np.asarray(index.valid).sum())
+        # dp_min is [nb, P] or [S, nb, P] when shard-stacked
+        self.n_blocks = int(index.dp_min.shape[-2])
+
+    # ------------------------------------------------------------- building
+    @classmethod
+    def build(
+        cls,
+        db,
+        *,
+        n_pivots: int = 16,
+        block_size: int = 128,
+        pivot_method: str = "maxmin",
+        reorder: bool = True,
+        seed: int = 0,
+        n_shards: int | None = None,
+        mesh=None,
+        **engine_kw: Any,
+    ) -> "SearchEngine":
+        """Build the index and wrap it in an engine in one call.
+
+        Pass ``mesh`` (and optionally ``n_shards``, default one shard per
+        mesh device) to build a sharded datastore served by the
+        ``sharded`` backend.
+        """
+        if mesh is not None:
+            from repro.core.distributed import (build_sharded_index,
+                                                place_sharded_index)
+            n_shards = n_shards or mesh.devices.size
+            idx = build_sharded_index(
+                np.asarray(db), n_shards, n_pivots=n_pivots,
+                block_size=block_size, pivot_method=pivot_method)
+            idx = place_sharded_index(idx, mesh,
+                                      engine_kw.get("axis_names"))
+            return cls(idx, mesh=mesh, **engine_kw)
+        idx = build_index(db, n_pivots=n_pivots, block_size=block_size,
+                          pivot_method=pivot_method, reorder=reorder,
+                          seed=seed)
+        return cls(idx, **engine_kw)
+
+    # ------------------------------------------------------------ searching
+    def search(self, queries, k: int, *, prune: bool = True,
+               element_stats: bool = False):
+        """Exact top-k: ``(sims [m,k] f32, ids [m,k] i32, SearchStats)``.
+
+        ``ids`` are original database row ids (-1 marks empty slots when
+        ``k`` exceeds the number of valid rows).  The result set is
+        identical to brute force for every backend and policy setting.
+        """
+        sims, ids, raw = self.backend.run(
+            self, queries, k, prune=prune, element_stats=element_stats)
+        stats = SearchStats(
+            backend=self.backend_name,
+            n_queries=int(queries.shape[0]),
+            k=k,
+            n_blocks=self.n_blocks,
+            block_prune_frac=raw.get("block_prune_frac", 0.0),
+            tile_computed_frac=raw.get("tile_computed_frac"),
+            elem_prune_frac=raw.get("elem_prune_frac"),
+            warm_start=self.warm_start,
+            best_first=self.best_first,
+            extras={k_: v for k_, v in raw.items()
+                    if k_ not in ("block_prune_frac", "tile_computed_frac",
+                                  "elem_prune_frac")},
+        )
+        return sims, ids, stats

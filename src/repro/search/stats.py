@@ -1,0 +1,62 @@
+"""The one stats object every search path returns.
+
+Replaces the three ad-hoc shapes the backends used to hand back (the scan
+path's ``{"block_prune_frac": ...}`` dict, the kernel path's bare
+``computed.mean()`` scalar, and the sharded path's discarded stats) with a
+single dataclass.  Dict-style access (``stats["block_prune_frac"]``,
+``stats.items()``) is kept so existing benchmark/report code keeps working.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+
+__all__ = ["SearchStats"]
+
+
+@dataclass(frozen=True)
+class SearchStats:
+    """Per-call search statistics.
+
+    Numeric fields are *lazy* jnp scalars (or tracers when the search ran
+    inside an outer jit, e.g. the serving decode step): reading one forces
+    the device sync, ignoring them costs nothing on the hot path.  Call
+    ``float(...)`` / :meth:`as_dict` to materialize for logging.
+
+    ``block_prune_frac`` is the engine-wide comparable number: the fraction
+    of (query-or-query-tile, block) work units whose Eq. 13 upper bound
+    proved them unnecessary.  For the scan backend the unit is a (query,
+    index block) pair; for the kernel backend it is a (query tile, kernel
+    tile) pair (``1 - tile_computed_frac``); for the sharded backend it is
+    the mean over shards of the local scan fraction; brute force is 0 by
+    definition.  The τ warm-start pre-scan (one block per query) is not
+    counted as pruned or computed work.
+    """
+
+    backend: str
+    n_queries: int
+    k: int
+    n_blocks: int
+    block_prune_frac: float = 0.0
+    tile_computed_frac: float | None = None
+    elem_prune_frac: float | None = None
+    warm_start: bool = False
+    best_first: bool = False
+    extras: dict = field(default_factory=dict)
+
+    # -- dict-style compatibility with the old ad-hoc stats dicts ----------
+    def __getitem__(self, key):
+        if key in self.extras:
+            return self.extras[key]
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def keys(self):
+        return [f.name for f in fields(self) if f.name != "extras"] + list(self.extras)
+
+    def items(self):
+        return [(k, self[k]) for k in self.keys()]
+
+    def as_dict(self) -> dict:
+        return dict(self.items())

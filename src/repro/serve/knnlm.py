@@ -7,8 +7,10 @@ search — LSH/IVF recall loss is exactly what the paper's bounds remove),
 turns neighbor similarities into a distribution with a temperature softmax,
 and interpolates:  p = (1-λ) p_LM + λ p_kNN.
 
-The datastore can be mesh-sharded (`repro.core.distributed`) — per-shard
-search + tiny top-k merge collective.
+All lookups go through :class:`repro.search.SearchEngine`, so backend
+choice (scan / Pallas kernel / mesh-sharded datastore) is engine policy —
+pass ``backend=`` (default auto) or a ready-made engine; the old
+``use_kernel`` flag is gone.
 """
 from __future__ import annotations
 
@@ -16,20 +18,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import BlockIndex, build_index, search
-from repro.kernels import ops as kops
+from repro.core.index import BlockIndex, build_index
 from repro.models.lm import embed_hidden
+from repro.search import SearchEngine
 
 
 class KNNDatastore:
     def __init__(self, index: BlockIndex, values: jnp.ndarray, vocab: int,
-                 *, k: int = 16, temp: float = 10.0, use_kernel: bool = False):
-        self.index = index
+                 *, k: int = 16, temp: float = 10.0, backend: str = "auto",
+                 engine: SearchEngine | None = None):
+        self.engine = engine or SearchEngine(index, backend=backend)
         self.values = values            # [n] int32 next-token ids
         self.vocab = vocab
         self.k = k
         self.temp = temp
-        self.use_kernel = use_kernel
+
+    @property
+    def index(self) -> BlockIndex:
+        return self.engine.index
 
     # ------------------------------------------------------------ building
     @classmethod
@@ -56,12 +62,7 @@ class KNNDatastore:
     # ----------------------------------------------------------- inference
     def lookup(self, hidden: jnp.ndarray):
         """hidden [B, D] -> (sims [B,k], token ids [B,k])."""
-        q = hidden / jnp.maximum(
-            jnp.linalg.norm(hidden, axis=-1, keepdims=True), 1e-12)
-        if self.use_kernel:
-            sims, ids, _ = kops.search_index(self.index, q, self.k)
-        else:
-            sims, ids, _ = search(self.index, q, self.k)
+        sims, ids, _stats = self.engine.search(hidden, self.k)
         toks = jnp.where(ids >= 0, self.values[jnp.maximum(ids, 0)], 0)
         return sims, toks, ids
 

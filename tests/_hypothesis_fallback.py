@@ -1,0 +1,75 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo targets has no network access, so optional dev
+dependencies may be missing.  This shim implements just enough of the
+hypothesis API used by the test suite (``given`` / ``settings`` /
+``strategies.integers`` / ``strategies.floats``) to run the property tests
+as seeded random sweeps with boundary values first.  When the real
+hypothesis is importable it is always preferred (see conftest).
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample, boundary):
+        self.sample = sample          # rng -> value
+        self.boundary = boundary      # list of edge-case values
+
+
+def integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)), [lo, hi])
+
+
+def floats(lo: float, hi: float, allow_nan: bool = False,
+           allow_infinity: bool = False) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(lo, hi)),
+                     [lo, hi, (lo + hi) / 2.0])
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def run():
+            n = getattr(run, "_max_examples",
+                        getattr(fn, "_max_examples", 50))
+            rng = np.random.default_rng(0)
+            # boundary combos first (all-lo, all-hi, ...), then random
+            width = max(len(s.boundary) for s in strategies)
+            for j in range(min(width, n)):
+                fn(*[s.boundary[min(j, len(s.boundary) - 1)]
+                     for s in strategies])
+            for _ in range(max(0, n - width)):
+                fn(*[s.sample(rng) for s in strategies])
+        # plain attribute copies: functools.wraps would expose the wrapped
+        # signature and make pytest treat the strategy args as fixtures
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        run._max_examples = getattr(fn, "_max_examples", 50)
+        return run
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -6,6 +6,12 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401  (real install preferred)
+except ModuleNotFoundError:
+    from tests._hypothesis_fallback import install as _install_hyp_fallback
+    _install_hyp_fallback()
+
 import numpy as np
 import pytest
 

@@ -1,0 +1,123 @@
+"""Property tests for interval_upper_bound / block_upper_bound (Eq. 13 over
+pivot intervals): the block bound must dominate every member's bound, for
+both the pure-JAX and the Pallas (interpret) implementations."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ref
+from repro.core.index import block_upper_bound, interval_upper_bound
+from repro.kernels import ref as kref
+from repro.kernels.bound_prune import block_bounds as bp_kernel
+
+
+def _random_intervals(rng, nb, p, *, contain_qp=None, qp=None, degenerate=False):
+    lo = rng.uniform(-1, 1, size=(nb, p))
+    if degenerate:
+        hi = lo.copy()
+    else:
+        hi = np.minimum(1.0, lo + rng.uniform(0, 0.8, size=(nb, p)))
+    if contain_qp is True and qp is not None:
+        # widen so every interval contains every query's pivot similarity
+        lo = np.minimum(lo, qp.min(axis=0)[None, :] - 1e-6)
+        hi = np.maximum(hi, qp.max(axis=0)[None, :] + 1e-6)
+    elif contain_qp is False and qp is not None:
+        # shift intervals strictly above every qp
+        top = qp.max()
+        lo = np.clip(top + 0.05 + 0.3 * rng.uniform(size=(nb, p)), -1, 0.999)
+        hi = np.clip(lo + 0.001, -1, 1)
+    return lo.astype(np.float32), hi.astype(np.float32)
+
+
+def test_interval_bound_inside_is_one(rng):
+    qp = np.clip(rng.normal(0, 0.4, size=(9, 5)), -0.99, 0.99).astype(np.float32)
+    lo, hi = _random_intervals(rng, 7, 5, contain_qp=True, qp=qp)
+    for b in range(7):
+        ub = interval_upper_bound(jnp.asarray(qp), jnp.asarray(lo[b]),
+                                  jnp.asarray(hi[b]))
+        np.testing.assert_allclose(np.asarray(ub), 1.0)
+
+
+def test_interval_bound_excluding_qp_below_one(rng):
+    qp = np.clip(rng.normal(0, 0.2, size=(6, 4)), -0.6, 0.6).astype(np.float32)
+    lo, hi = _random_intervals(rng, 5, 4, contain_qp=False, qp=qp)
+    ub = interval_upper_bound(jnp.asarray(qp)[:, None, :],
+                              jnp.asarray(lo)[None, :, :],
+                              jnp.asarray(hi)[None, :, :])
+    assert np.all(np.asarray(ub) < 1.0)
+    # and it still equals the max of the endpoint bounds (peak at nearer end)
+    want = np.maximum(ref.ub_mult(qp[:, None, :], lo[None]),
+                      ref.ub_mult(qp[:, None, :], hi[None]))
+    np.testing.assert_allclose(np.asarray(ub), want, atol=2e-6)
+
+
+def test_degenerate_interval_equals_point_bound(rng):
+    """lo == hi: the interval bound collapses to the plain Eq. 13 bound."""
+    qp = np.clip(rng.normal(0, 0.5, size=(8, 6)), -1, 1).astype(np.float32)
+    lo, hi = _random_intervals(rng, 10, 6, degenerate=True)
+    got = interval_upper_bound(jnp.asarray(qp)[:, None, :],
+                               jnp.asarray(lo)[None], jnp.asarray(hi)[None])
+    want = ref.ub_mult(qp[:, None, :].astype(np.float64), lo[None])
+    # where qp falls exactly on the degenerate point the bound is 1 == ub_mult
+    np.testing.assert_allclose(np.asarray(got), want, atol=3e-6)
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_block_bound_dominates_members(impl, rng):
+    """For any member dp with dp_p in [lo_p, hi_p] for all p, the block
+    bound is >= the member's own pivot upper bound (Eq. 13 min over p)."""
+    m, nb, p, members = 13, 11, 6, 40
+    qp = np.clip(rng.normal(0, 0.5, size=(m, p)), -1, 1).astype(np.float32)
+    lo, hi = _random_intervals(rng, nb, p)
+    if impl == "jax":
+        blk = np.asarray(kref.block_bounds(jnp.asarray(qp), jnp.asarray(lo),
+                                           jnp.asarray(hi)))
+        blk2 = np.stack([np.asarray(block_upper_bound(
+            jnp.asarray(qp), jnp.asarray(lo[b]), jnp.asarray(hi[b])))
+            for b in range(nb)], axis=1)
+        np.testing.assert_allclose(blk, blk2, atol=1e-6)  # two jnp paths agree
+    else:
+        blk = np.asarray(bp_kernel(jnp.asarray(qp), jnp.asarray(lo),
+                                   jnp.asarray(hi), bm=8, bb=8,
+                                   interpret=True))
+    for _ in range(members):
+        frac = rng.uniform(size=(nb, p)).astype(np.float32)
+        dp = lo + frac * (hi - lo)                       # member inside block
+        member_ub = np.min(ref.ub_mult(qp[:, None, :], dp[None]), axis=-1)
+        assert np.all(blk + 1e-5 >= member_ub), (
+            f"{impl}: block bound fails to dominate a member bound")
+
+
+def test_block_bound_empty_padded_block(rng):
+    """A fully-padded block carries the neutral [0, 0] interval from
+    build_index; its bound must stay finite and valid (rows are masked, so
+    any finite value is safe — but NaN/inf would poison the scan)."""
+    qp = np.clip(rng.normal(0, 0.5, size=(4, 3)), -1, 1).astype(np.float32)
+    lo = np.zeros((2, 3), np.float32)
+    hi = np.zeros((2, 3), np.float32)
+    for fn in (lambda: kref.block_bounds(jnp.asarray(qp), jnp.asarray(lo),
+                                         jnp.asarray(hi)),
+               lambda: bp_kernel(jnp.asarray(qp), jnp.asarray(lo),
+                                 jnp.asarray(hi), bm=8, bb=8, interpret=True)):
+        out = np.asarray(fn())
+        assert np.all(np.isfinite(out))
+        # neutral interval at 0: bound = min_p ub_mult(qp_p, 0) <= 1
+        want = np.min(ref.ub_mult(qp, 0.0), axis=-1)
+        np.testing.assert_allclose(out, np.broadcast_to(want[:, None],
+                                                        out.shape), atol=2e-6)
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_jax_and_pallas_agree_random(impl, rng):
+    """Cross-check both implementations on a randomized sweep (the Pallas
+    kernel pads M/NB internally; shapes chosen to exercise that)."""
+    for m, nb, p in [(3, 5, 2), (17, 9, 7), (33, 40, 16)]:
+        qp = np.clip(rng.normal(0, 0.5, size=(m, p)), -1, 1).astype(np.float32)
+        lo, hi = _random_intervals(rng, nb, p)
+        want = np.asarray(kref.block_bounds(jnp.asarray(qp), jnp.asarray(lo),
+                                            jnp.asarray(hi)))
+        if impl == "pallas":
+            got = np.asarray(bp_kernel(jnp.asarray(qp), jnp.asarray(lo),
+                                       jnp.asarray(hi), bm=16, bb=16,
+                                       interpret=True))
+            np.testing.assert_allclose(got, want, atol=1e-5)

@@ -14,7 +14,10 @@ def _run(code: str, devices: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # pin the subprocess to the host platform: with a TPU plugin installed
+    # but no TPU attached, backend autodetection stalls for minutes in
+    # GCP-metadata retries before falling back
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
@@ -39,6 +42,31 @@ def test_sharded_search_exact():
         np.testing.assert_allclose(np.asarray(s), sref, atol=2e-5)
         assert (np.asarray(i) == iref).mean() > 0.98
         print("ok")
+    """)
+
+
+def test_search_engine_sharded_backend():
+    """SearchEngine auto-selects the sharded backend on a mesh and matches
+    brute force, with warm-start/best-first applied per shard."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ref
+        from repro.search import SearchEngine
+        rng = np.random.default_rng(7)
+        c = ref.normalize(rng.normal(size=(6, 24)))
+        db = ref.normalize(c[rng.integers(0, 6, 4000)] +
+                           0.05 * rng.normal(size=(4000, 24))).astype(np.float32)
+        q = ref.normalize(db[::500] + 0.01 * rng.normal(size=(8, 24))
+                          ).astype(np.float32)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        eng = SearchEngine.build(db, n_pivots=8, block_size=64, mesh=mesh)
+        assert eng.backend_name == "sharded"
+        s, i, stats = eng.search(jnp.asarray(q), 7)
+        sref, iref = ref.brute_force_knn(q, db, 7)
+        np.testing.assert_allclose(np.asarray(s), sref, atol=2e-5)
+        assert (np.asarray(i) == iref).mean() > 0.98
+        assert 0.0 <= stats.block_prune_frac <= 1.0
+        print("ok, shard prune_frac", stats.block_prune_frac)
     """)
 
 

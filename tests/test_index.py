@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ref
-from repro.core.index import build_index, search, search_brute
+from repro.core.index import build_index, reorder_perm, search, search_brute
 from repro.core.vptree import VPTree
 from tests.conftest import clustered
 
@@ -78,6 +78,51 @@ def test_exactness_property(n, d, k, seed):
     s, i, _ = search(idx, jnp.asarray(q), k)
     sref, _ = ref.brute_force_knn(q, db, k)
     np.testing.assert_allclose(np.asarray(s), sref, atol=5e-5)
+
+
+def test_reorder_perm_integer_safe_at_64_pivots():
+    """Regression: the old float sort key (``nearest * 4.0 - near_sim``)
+    burned ~8 mantissa bits on the group id at n_pivots=64, collapsing
+    within-group similarities closer than ~3e-5.  The lexicographic key
+    must match a numpy lexsort oracle exactly."""
+    n_pivots = 64
+    n = 512
+    rng = np.random.default_rng(3)
+    nearest = rng.integers(0, n_pivots, n)
+    # sims packed tightly (1e-6 apart) near 1.0: representable in fp32 on
+    # their own, NOT representable once shifted by the group term ~256
+    near_sim = 0.999 + 1e-6 * rng.integers(0, 200, n)
+    dp = np.full((n, n_pivots), -1.0, np.float32)
+    dp[np.arange(n), nearest] = near_sim.astype(np.float32)
+    valid = np.ones(n, bool)
+    valid[-7:] = False                       # padding rows must sort last
+    perm = np.asarray(reorder_perm(jnp.asarray(dp), jnp.asarray(valid),
+                                   n_pivots))
+    group = np.where(valid, nearest, n_pivots)
+    want = np.lexsort((-dp[np.arange(n), nearest], group))
+    np.testing.assert_array_equal(perm, want)
+    g_got = group[perm]
+    assert (np.diff(g_got) >= 0).all(), "groups must be contiguous, pad last"
+    sims_sorted = dp[np.arange(n), nearest][perm]
+    for g in range(n_pivots):
+        s = sims_sorted[g_got == g]
+        assert (np.diff(s) <= 0).all(), f"group {g} not descending"
+    # the old float key fails this exact check:
+    old_key = np.where(valid, nearest * 4.0 - dp[np.arange(n), nearest],
+                       np.inf).astype(np.float32)
+    old_perm = np.argsort(old_key, kind="stable")
+    old_sims = dp[np.arange(n), nearest][old_perm]
+    old_groups = group[old_perm]
+    old_ok = all((np.diff(old_sims[old_groups == g]) <= 0).all()
+                 for g in range(n_pivots))
+    assert not old_ok, "float key unexpectedly survived the 64-pivot regime"
+
+
+def test_build_index_64_pivots_exact(rng):
+    """End-to-end at n_pivots=64: reorder keeps search exact."""
+    db = clustered(rng, 1500, 48, n_centers=12)
+    q = db[::300] + 0.01 * rng.normal(size=(5, 48)).astype(np.float32)
+    _check_exact(db, q, 8, n_pivots=64, block_size=64)
 
 
 def test_scalar_reference_pruned_knn(rng):

@@ -1,0 +1,148 @@
+"""SearchEngine: every backend x policy returns the brute-force result set;
+auto-selection, stats shape, and the pruning wins of warm-start/best-first."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ref
+from repro.core.index import build_index
+from repro.search import SearchEngine, SearchStats, available_backends
+from tests.conftest import clustered
+
+LOCAL_BACKENDS = ["scan", "kernel", "brute"]   # sharded needs a multi-dev mesh
+
+
+def _sets_equal(ids, iref):
+    return (np.sort(np.asarray(ids), 1) == np.sort(iref, 1)).mean()
+
+
+def test_registry_has_all_backends():
+    assert {"scan", "kernel", "sharded", "brute"} <= set(available_backends())
+
+
+def test_auto_selection_cpu(rng):
+    small = build_index(jnp.asarray(rng.normal(size=(100, 8)).astype(np.float32)),
+                        n_pivots=4, block_size=32)
+    big = build_index(jnp.asarray(rng.normal(size=(2000, 8)).astype(np.float32)),
+                      n_pivots=4, block_size=64)
+    assert SearchEngine(small).backend_name == "brute"
+    assert SearchEngine(big).backend_name == "scan"   # CPU: no Mosaic
+
+
+@pytest.mark.parametrize("backend", LOCAL_BACKENDS)
+@pytest.mark.parametrize("warm_start,best_first",
+                         [(False, False), (True, False), (False, True),
+                          (True, True)])
+def test_backends_match_brute_random(backend, warm_start, best_first, rng):
+    db = rng.normal(size=(900, 24)).astype(np.float32)
+    q = rng.normal(size=(17, 24)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=64)
+    eng = SearchEngine(idx, backend=backend, warm_start=warm_start,
+                       best_first=best_first, bm=8)
+    s, i, stats = eng.search(jnp.asarray(q), 7)
+    sref, iref = ref.brute_force_knn(q, db, 7)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    assert _sets_equal(i, iref) > 0.98                # ties only
+    assert isinstance(stats, SearchStats) and stats.backend == backend
+
+
+@pytest.mark.parametrize("backend", LOCAL_BACKENDS)
+def test_backends_match_brute_clustered(backend, rng):
+    db = clustered(rng, 3000, 32)
+    q = db[::250] + 0.01 * rng.normal(size=(12, 32)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+    eng = SearchEngine(idx, backend=backend, bm=8)
+    s, i, _ = eng.search(jnp.asarray(q), 10)
+    sref, iref = ref.brute_force_knn(q, db, 10)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    assert _sets_equal(i, iref) > 0.98
+
+
+def test_exactness_property_sweep():
+    """Property sweep over (n, d, k, seed): every backend = brute sets."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(50, 600))
+        d = int(rng.integers(4, 32))
+        k = int(rng.integers(1, min(9, n)))
+        db = clustered(rng, n, d) if seed % 2 else \
+            rng.normal(size=(n, d)).astype(np.float32)
+        q = rng.normal(size=(5, d)).astype(np.float32)
+        idx = build_index(jnp.asarray(db), n_pivots=min(4, n), block_size=32)
+        sref, iref = ref.brute_force_knn(q, db, k)
+        for backend in LOCAL_BACKENDS:
+            eng = SearchEngine(idx, backend=backend, bm=8)
+            s, i, _ = eng.search(jnp.asarray(q), k)
+            np.testing.assert_allclose(
+                np.asarray(s), sref, atol=5e-5,
+                err_msg=f"{backend} n={n} d={d} k={k} seed={seed}")
+
+
+def test_warm_start_and_best_first_improve_pruning(rng):
+    """The lifted kernel-only optimizations now help the scan backend too."""
+    db = clustered(rng, 4096, 32, n_centers=8, noise=0.04)
+    q = db[rng.choice(4096, 64, replace=False)]
+    q = jnp.asarray(q + 0.02 * rng.normal(size=q.shape).astype(np.float32))
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+    base = SearchEngine(idx, backend="scan", warm_start=False,
+                        best_first=False)
+    eng = SearchEngine(idx, backend="scan")
+    _, _, st0 = base.search(q, 5)
+    _, _, st1 = eng.search(q, 5)
+    assert st1.block_prune_frac > st0.block_prune_frac, (
+        st0.block_prune_frac, st1.block_prune_frac)
+
+    kern0 = SearchEngine(idx, backend="kernel", bm=16, warm_start=False,
+                         best_first=False)
+    kern1 = SearchEngine(idx, backend="kernel", bm=16)
+    _, _, kt0 = kern0.search(q, 5)
+    _, _, kt1 = kern1.search(q, 5)
+    assert kt1.tile_computed_frac <= kt0.tile_computed_frac + 1e-6
+
+
+def test_stats_dict_compat(rng):
+    db = clustered(rng, 1000, 16)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=64)
+    eng = SearchEngine(idx, backend="scan")
+    _, _, stats = eng.search(jnp.asarray(db[:4]), 3, element_stats=True)
+    assert stats["block_prune_frac"] == stats.block_prune_frac
+    assert "elem_prune_frac" in stats.keys()
+    d = stats.as_dict()
+    assert d["backend"] == "scan" and 0.0 <= d["block_prune_frac"] <= 1.0
+    with pytest.raises(KeyError):
+        stats["nope"]
+
+
+def test_engine_build_convenience(rng):
+    db = clustered(rng, 500, 16)
+    eng = SearchEngine.build(db, n_pivots=8, block_size=32)
+    s, i, stats = eng.search(jnp.asarray(db[:6]), 4)
+    sref, iref = ref.brute_force_knn(db[:6], db, 4)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+
+
+def test_k_exceeds_valid_rows(rng):
+    db = rng.normal(size=(40, 8)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=16)
+    # (kernel excluded: it requires k <= bn, a documented tile constraint)
+    for backend in ["scan", "brute"]:
+        eng = SearchEngine(idx, backend=backend, bm=8)
+        s, i, _ = eng.search(jnp.asarray(db[:2]), 40)
+        sref, _ = ref.brute_force_knn(db[:2], db, 40)
+        np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5,
+                                   err_msg=backend)
+
+
+def test_unknown_backend_raises(rng):
+    db = rng.normal(size=(64, 8)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
+    with pytest.raises(ValueError, match="unknown search backend"):
+        SearchEngine(idx, backend="mosaic-gpu")
+
+
+def test_sharded_backend_requires_mesh(rng):
+    db = rng.normal(size=(64, 8)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
+    eng = SearchEngine(idx, backend="sharded")
+    with pytest.raises(ValueError, match="mesh"):
+        eng.search(jnp.asarray(db[:2]), 3)
