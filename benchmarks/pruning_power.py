@@ -14,10 +14,13 @@ paper's own curse-of-dimensionality discussion), clustered embeddings (the
 realistic neural-embedding case), and the dedup regime (threshold ~ 1).
 
 ``--quick`` runs a smaller instance of the clustered regime only (CI smoke).
+``--json PATH`` additionally writes the rows as a machine-readable baseline
+(the checked-in ``BENCH_pruning.json`` gives future PRs a perf trajectory).
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax.numpy as jnp
 import numpy as np
@@ -95,10 +98,15 @@ def run(k: int = 10, n_queries: int = 32, *, quick: bool = False):
         rows.append((f"pruning/{regime}/kernel_tile_computed_frac",
                      kt0.tile_computed_frac, "Pallas kernel, bm=8 (baseline)"))
         kern1 = SearchEngine(idx, backend="kernel", bm=8)
-        _, _, kt1 = kern1.search(qj, k)
+        _, _, kt1 = kern1.search(qj, k, element_stats=True)
         rows.append((f"pruning/{regime}/kernel_tile_computed_frac_engine",
                      kt1.tile_computed_frac,
                      "Pallas kernel, bm=8, warm-start + best-first"))
+        # backend-uniform element counter: kernel vs scan should agree at
+        # matched granularity (tests pin this; here it is tracked over time)
+        rows.append((f"pruning/{regime}/kernel_elem_prune_frac",
+                     kt1.elem_prune_frac,
+                     "per-element Eq.13 pruning seen by the kernel"))
     return rows
 
 
@@ -106,6 +114,21 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small clustered-only smoke run (CI)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows as JSON (the BENCH_pruning.json "
+                         "baseline format)")
     args = ap.parse_args()
-    for name, val, note in run(quick=args.quick):
+    rows = run(quick=args.quick)
+    for name, val, note in rows:
         print(f"{name},{val:.4f},{note}")
+    if args.json:
+        payload = {
+            "benchmark": "pruning_power",
+            "quick": args.quick,
+            "metrics": [{"name": n, "value": round(float(v), 4), "note": t}
+                        for n, v, t in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json} ({len(rows)} metrics)")

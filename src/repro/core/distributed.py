@@ -76,37 +76,51 @@ def build_sharded_index(
 
 def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names,
                          *, warm_start: bool = False, best_first: bool = False,
+                         warm_start_blocks: int | None = None,
+                         element_stats: bool = False,
                          with_stats: bool = False):
     """Body that runs inside ``shard_map``: local scan + global merge.
 
     ``index`` arrives with the leading shard axis of size 1 (this device's
-    shard); ``queries`` are replicated.  ``warm_start`` / ``best_first``
-    are the engine policies, applied to each shard's local scan.
+    shard); ``queries`` are replicated.  ``warm_start`` / ``best_first`` /
+    ``warm_start_blocks`` / ``element_stats`` are the engine policies,
+    applied to each shard's local scan (the τ prescan seeds from each
+    shard's own best-bound blocks — DESIGN.md §3.4).
     """
     from repro.dist.collectives import topk_allgather_merge
     from repro.search.backends import map_row_ids, prep_queries, scan_search
     local = jax.tree.map(lambda x: x[0], index)
     qn, qp = prep_queries(local, queries)
-    sims, pos, blk_pruned, _ = scan_search(
-        local, qn, qp, k, warm_start=warm_start, best_first=best_first)
+    sims, pos, blk_pruned, elem_pruned = scan_search(
+        local, qn, qp, k, warm_start=warm_start, best_first=best_first,
+        warm_start_blocks=warm_start_blocks, element_stats=element_stats)
     # build_sharded_index bakes GLOBAL ids into row_ids — no rank arithmetic
     gids = map_row_ids(local.row_ids, pos)
     # tiny collective: O(devices * k) candidates
     merged = topk_allgather_merge(sims, gids, k, axis_names)
     if not with_stats:
         return merged
-    frac = blk_pruned / (qn.shape[0] * local.n_blocks)
-    return merged + (jax.lax.pmean(frac, axis_names),)
+    m = qn.shape[0]
+    frac = jax.lax.pmean(blk_pruned / (m * local.n_blocks), axis_names)
+    # element fraction over GLOBAL (query, valid row) pairs: psum of counts
+    # over psum of valid rows, so unevenly-filled shards weight correctly
+    n_valid = local.valid.sum().astype(jnp.float32)
+    efrac = (jax.lax.psum(elem_pruned, axis_names)
+             / jnp.maximum(1.0, m * jax.lax.psum(n_valid, axis_names)))
+    return merged + (frac, efrac)
 
 
 def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None,
                         *, warm_start: bool = False, best_first: bool = False,
+                        warm_start_blocks: int | None = None,
+                        element_stats: bool = False,
                         with_stats: bool = False):
     """Build a jitted ``(index, queries, k) -> (sims, gids)`` closure.
 
     ``axis_names`` defaults to *all* mesh axes — the datastore shards over
     every chip.  Results are fully replicated.  With ``with_stats`` the
-    closure additionally returns the shard-mean block-prune fraction.
+    closure additionally returns the shard-mean block-prune fraction and
+    the global element-prune fraction (0 unless ``element_stats``).
     """
     axis_names = tuple(axis_names or mesh.axis_names)
 
@@ -117,10 +131,12 @@ def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None,
         fn = shard_map(
             functools.partial(sharded_search_local, k=k, axis_names=axis_names,
                               warm_start=warm_start, best_first=best_first,
+                              warm_start_blocks=warm_start_blocks,
+                              element_stats=element_stats,
                               with_stats=with_stats),
             mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(axis_names), index), P()),
-            out_specs=(P(), P(), P()) if with_stats else (P(), P()),
+            out_specs=(P(), P(), P(), P()) if with_stats else (P(), P()),
             check_vma=False,
         )
         return fn(index, queries)

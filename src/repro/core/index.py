@@ -185,7 +185,7 @@ def search(
 
     Thin shim over the unified runtime's ``scan`` backend, preserving the
     historical signature and stats dict (natural block order, no τ
-    warm-start).  Returns ``(sims [m,k] f32, idx [m,k] i32, stats)``:
+    warm-start); the migration table lives in docs/search-api.md.  Returns ``(sims [m,k] f32, idx [m,k] i32, stats)``:
       ``block_prune_frac``   fraction of (query, block) pairs skipped,
       ``elem_prune_frac``    fraction of (query, point) pairs whose individual
                              Eq. 13 bound also prunes them (only if
@@ -193,6 +193,11 @@ def search(
                              pruning available to a scalar CPU index).
     The result is exact: identical set to brute force (see tests).
     """
+    import warnings
+    warnings.warn(
+        "repro.core.index.search is deprecated; use "
+        "repro.search.SearchEngine (docs/search-api.md has the migration "
+        "table)", DeprecationWarning, stacklevel=2)
     from repro.search.backends import (map_row_ids, prep_queries,
                                        scan_search)
     qn, qp = prep_queries(index, queries)

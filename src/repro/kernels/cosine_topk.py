@@ -39,11 +39,16 @@ DEFAULT_BN = 256
 _NEG_INF = float("-inf")
 
 
-def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool):
+def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool,
+                 element_stats: bool):
     def kernel(order_ref, nvalid_ref, tau_ref, qn_ref, db_ref, qp_ref,
-               lo_ref, hi_ref,
-               top_s_out, top_i_out, computed_ref,
-               top_s, top_i):
+               lo_ref, hi_ref, *rest):
+        if element_stats:
+            dp_ref, top_s_out, top_i_out, computed_ref, elem_ref = rest[:5]
+            top_s, top_i = rest[5:]
+        else:
+            top_s_out, top_i_out, computed_ref = rest[:3]
+            top_s, top_i = rest[3:]
         i = pl.program_id(0)
         j = pl.program_id(1)
         nj = pl.num_programs(1)
@@ -73,13 +78,33 @@ def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool):
         ub = per_p.min(axis=-1)                           # [BM]
 
         tau = top_s[:, k - 1]                             # running kth best
+        row = i * bm + jax.lax.broadcasted_iota(jnp.int32, (qp.shape[0], 1), 0)[:, 0]
+        live = row < nvalid_ref[0, 1]                     # padded query rows
         if prune:
             # padded query rows (>= m_valid) must not force computation
-            row = i * bm + jax.lax.broadcasted_iota(jnp.int32, (qp.shape[0], 1), 0)[:, 0]
-            live = row < nvalid_ref[0, 1]
             needed = jnp.any((ub + margin >= tau) & live)
         else:
             needed = True
+
+        if element_stats:
+            # per-(query, row) Eq. 13 bound vs the running τ at visit time —
+            # the same statistic the scan backend accumulates, so
+            # elem_prune_frac is backend-uniform.  Counted regardless of
+            # whether the tile matmul itself was skipped (the statistic
+            # measures bound power, not work done); unrolled over the P
+            # pivots to keep intermediates at [BM, BN].
+            dpv = dp_ref[...].astype(jnp.float32)         # [BN, P]
+            eub = None
+            for p_i in range(dpv.shape[1]):
+                a = qp[:, p_i:p_i + 1]                    # [BM, 1]
+                b = dpv[:, p_i][None, :]                  # [1, BN]
+                rad = rad_q[:, p_i:p_i + 1] * jnp.maximum(0.0, 1.0 - b * b)
+                cand = a * b + jnp.sqrt(rad)
+                eub = cand if eub is None else jnp.minimum(eub, cand)
+            ecol = jb * bn + jax.lax.broadcasted_iota(jnp.int32, eub.shape, 1)
+            epruned = ((eub + margin < tau[:, None])
+                       & (ecol < nvalid_ref[0, 0]) & live[:, None])
+            elem_ref[0, 0] = epruned.sum().astype(jnp.int32)
 
         @pl.when(needed)
         def _compute():
@@ -119,7 +144,8 @@ def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "bm", "bn", "margin", "prune", "interpret"),
+    static_argnames=("k", "bm", "bn", "margin", "prune", "interpret",
+                     "element_stats"),
 )
 def pruned_topk(
     qn: Array,
@@ -131,6 +157,7 @@ def pruned_topk(
     m_valid: Array | int | None = None,
     tau_init: Array | None = None,
     block_order: Array | None = None,
+    dp: Array | None = None,
     *,
     k: int,
     bm: int = DEFAULT_BM,
@@ -138,6 +165,7 @@ def pruned_topk(
     margin: float = 4e-7,
     prune: bool = True,
     interpret: bool = False,
+    element_stats: bool = False,
 ):
     """Fused exact top-k with block pruning.
 
@@ -149,24 +177,34 @@ def pruned_topk(
                (use :func:`repro.search.backends.coarsen_intervals`).
       n_valid: number of real rows in db.
       tau_init: [M] optional τ warm-start seeds (true lower bounds on each
-               query's k-th best; see SearchEngine).
+               query's k-th best; see SearchEngine and DESIGN.md §3.4 for
+               the multi-block prescan that produces them).
       block_order: [M_tiles, N_tiles] i32 optional per-query-tile db tile
                visiting order (best-first).  Scalar-prefetched: the
                BlockSpec index maps read it, so a pruned tile's HBM->VMEM
                copy targets the *bound-ordered* tile, and sequential steps
                see monotonically less useful tiles — τ rises early.
                Identity order when None.
+      dp:      [N, P] per-row pivot similarities; required when
+               ``element_stats`` (the per-element Eq. 13 bound needs them).
       k:       top-k (k <= bn).
+      element_stats: also count, per visited tile, the (query, row) pairs
+               whose individual Eq. 13 bound is below the running τ — the
+               backend-uniform ``elem_prune_frac`` numerator.
 
     Returns (sims [M, k] f32, idx [M, k] i32 positions into db,
     computed [M_tiles, N_tiles] i32 — which db tiles did real work, indexed
-    by TILE id, not visit step).
+    by TILE id, not visit step — and elem_pruned [M_tiles, N_tiles] i32
+    per-tile pruned-element counts, ``None`` unless ``element_stats``).
     """
     m, d = qn.shape
     n = db.shape[0]
     p = qp.shape[1]
     assert n % bn == 0 and dp_min.shape[0] == n // bn, (n, bn, dp_min.shape)
     assert k <= bn, "k must fit in one db tile"
+    if element_stats and dp is None:
+        raise ValueError("element_stats=True requires dp ([N, P] per-row "
+                         "pivot similarities)")
     mp = -(-m // bm) * bm
     qn_p = jnp.pad(qn, ((0, mp - m), (0, 0)))
     # padded query rows are masked out of the prune predicate via m_valid
@@ -188,39 +226,51 @@ def pruned_topk(
             jnp.arange(grid[1], dtype=jnp.int32)[None, :], grid)
     block_order = block_order.astype(jnp.int32)
     assert block_order.shape == grid, (block_order.shape, grid)
-    kern = _make_kernel(k, bm, bn, margin, prune)
+    kern = _make_kernel(k, bm, bn, margin, prune, element_stats)
     out_shape = [
         jax.ShapeDtypeStruct((mp, k), jnp.float32),
         jax.ShapeDtypeStruct((mp, k), jnp.int32),
         jax.ShapeDtypeStruct(grid, jnp.int32),
     ]
+    in_specs = [
+        pl.BlockSpec((1, 2), lambda i, j, ord_: (0, 0)),  # n_valid, m_valid
+        pl.BlockSpec((bm, 1), lambda i, j, ord_: (i, 0)),  # tau seeds
+        pl.BlockSpec((bm, d), lambda i, j, ord_: (i, 0)),  # qn
+        pl.BlockSpec((bn, d), lambda i, j, ord_: (ord_[i, j], 0)),  # db
+        pl.BlockSpec((bm, p), lambda i, j, ord_: (i, 0)),  # qp
+        pl.BlockSpec((1, p), lambda i, j, ord_: (ord_[i, j], 0)),   # lo
+        pl.BlockSpec((1, p), lambda i, j, ord_: (ord_[i, j], 0)),   # hi
+    ]
+    out_specs = [
+        pl.BlockSpec((bm, k), lambda i, j, ord_: (i, 0)),
+        pl.BlockSpec((bm, k), lambda i, j, ord_: (i, 0)),
+        # computed is indexed by the VISITED tile id, not the step
+        pl.BlockSpec((1, 1), lambda i, j, ord_: (i, ord_[i, j])),
+    ]
+    operands = [block_order, nv, tau, qn_p, db, qp_p, dp_min, dp_max]
+    if element_stats:
+        in_specs.append(
+            pl.BlockSpec((bn, p), lambda i, j, ord_: (ord_[i, j], 0)))  # dp
+        operands.append(dp)
+        out_shape.append(jax.ShapeDtypeStruct(grid, jnp.int32))
+        out_specs.append(
+            pl.BlockSpec((1, 1), lambda i, j, ord_: (i, ord_[i, j])))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                                # block_order
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 2), lambda i, j, ord_: (0, 0)),  # n_valid, m_valid
-            pl.BlockSpec((bm, 1), lambda i, j, ord_: (i, 0)),  # tau seeds
-            pl.BlockSpec((bm, d), lambda i, j, ord_: (i, 0)),  # qn
-            pl.BlockSpec((bn, d), lambda i, j, ord_: (ord_[i, j], 0)),  # db
-            pl.BlockSpec((bm, p), lambda i, j, ord_: (i, 0)),  # qp
-            pl.BlockSpec((1, p), lambda i, j, ord_: (ord_[i, j], 0)),   # lo
-            pl.BlockSpec((1, p), lambda i, j, ord_: (ord_[i, j], 0)),   # hi
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, k), lambda i, j, ord_: (i, 0)),
-            pl.BlockSpec((bm, k), lambda i, j, ord_: (i, 0)),
-            # computed is indexed by the VISITED tile id, not the step
-            pl.BlockSpec((1, 1), lambda i, j, ord_: (i, ord_[i, j])),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((bm, k), jnp.float32),
             pltpu.VMEM((bm, k), jnp.int32),
         ],
     )
-    top_s, top_i, computed = pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(block_order, nv, tau, qn_p, db, qp_p, dp_min, dp_max)
-    return top_s[:m], top_i[:m], computed
+    )(*operands)
+    top_s, top_i, computed = out[:3]
+    elem = out[3] if element_stats else None
+    return top_s[:m], top_i[:m], computed, elem

@@ -55,7 +55,7 @@ def search_index(
     from repro.search.backends import (kernel_search, map_row_ids,
                                        prep_queries)
     qn, qp = prep_queries(index, queries)
-    sims, pos, computed = kernel_search(
+    sims, pos, computed, _ = kernel_search(
         index, qn, qp, k, bm=bm, bn=bn, prune=prune,
         sort_queries=sort_queries, warm_start=warm_start,
         best_first=best_first, interpret=interpret)

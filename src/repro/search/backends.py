@@ -16,9 +16,11 @@ only its compute strategy:
   ``sharded`` per-device scan + tiny all-gather top-k merge (mesh required)
   ``brute``   full matmul + top-k (baseline / tiny datastores)
 
-The shared jitted helpers here (τ warm-start seeding, best-first block
+The shared helpers here (τ warm-start seeding, best-first block
 permutation) are what the refactor lifted out of the kernel-only path so
-that *every* backend benefits — see DESIGN.md §3.
+that *every* backend benefits — DESIGN.md §3.1 (warm-start), §3.2
+(best-first), §3.3 (the backend contract), §3.4 (the multi-block
+warm-start schedule and its exactness argument).
 """
 from __future__ import annotations
 
@@ -37,7 +39,7 @@ from repro.kernels import ref as kref
 __all__ = [
     "register_backend", "get_backend", "available_backends",
     "prep_queries", "map_row_ids", "scan_search", "kernel_search",
-    "brute_search", "tau_warm_start", "coarsen_intervals",
+    "brute_search", "tau_warm_start", "prescan_blocks", "coarsen_intervals",
 ]
 
 _REGISTRY: dict[str, object] = {}
@@ -90,24 +92,49 @@ def coarsen_intervals(dp_min: Array, dp_max: Array, factor: int):
     return lo, hi
 
 
-def tau_warm_start(qn: Array, db_blocks: Array, valid_blocks: Array,
-                   ub: Array, k: int) -> Array:
-    """Seed each query's running k-th-best with its best-bound block.
+def prescan_blocks(k: int, block_rows: int, n_blocks: int,
+                   warm_start_blocks: int | None = None) -> int:
+    """Static prescan width: how many bound-ranked blocks τ seeding scores.
 
-    One cheap ``[m, bs] x d`` matmul: exact-score the single block whose
-    Eq. 13 upper bound is highest for this query and take the k-th best.
-    The seed is a true lower bound on the final τ *achieved by k real
-    candidates of that block*, so seeding every top-k slot with it (minus
-    an ulp so ties displace seeds) cannot evict a true neighbor.  Queries
-    whose best block holds < k valid rows get -inf (no seeding).
-
-    Caller must guarantee ``block rows >= k`` (static); ``ub`` is [m, nb]
-    at the same block granularity as ``db_blocks`` [nb, bs, d].
+    The floor ``ceil(k / block_rows)`` is the fewest blocks that can hold k
+    candidates — this is what lets warm-start engage for every ``k`` instead
+    of auto-disabling when ``k`` exceeds the block size (DESIGN.md §3.4).
+    ``warm_start_blocks`` only ever *widens* the prescan (a tighter seed at
+    the cost of a larger gather); the result is clamped to ``n_blocks``.
     """
-    best = jnp.argmax(ub, axis=1)                       # [m]
-    blk = db_blocks[best]                               # [m, bs, d]
-    vb = valid_blocks[best]                             # [m, bs]
-    scores = jnp.einsum("md,mbd->mb", qn, blk)
+    n_pre = -(-k // max(1, block_rows))
+    if warm_start_blocks is not None:
+        n_pre = max(n_pre, warm_start_blocks)
+    return max(1, min(n_pre, n_blocks))
+
+
+def tau_warm_start(qn: Array, db_blocks: Array, valid_blocks: Array,
+                   ub: Array, k: int, n_pre: int = 1) -> Array:
+    """Seed each query's running k-th-best from its ``n_pre`` best-bound blocks.
+
+    One batched ``[m, n_pre * bs] x d`` matmul: gather the ``n_pre`` blocks
+    whose Eq. 13 upper bounds are highest for each query (bound-ranked via
+    ``top_k``), exact-score them together, and take the k-th best of the
+    merged candidate set.  The seed is a true lower bound on the final τ
+    *achieved by k real candidates of those blocks*, so seeding every top-k
+    slot with it (minus an ulp so ties displace seeds) cannot evict a true
+    neighbor (DESIGN.md §3.4).  Queries whose prescanned blocks hold < k
+    valid rows get -inf (no seeding).
+
+    ``n_pre`` is static; size it with :func:`prescan_blocks` so that
+    ``n_pre * bs >= k`` whenever the database allows.  ``ub`` is [m, nb] at
+    the same block granularity as ``db_blocks`` [nb, bs, d].
+    """
+    m = qn.shape[0]
+    nb, bs, d = db_blocks.shape
+    n_pre = max(1, min(n_pre, nb))
+    if n_pre * bs < k:
+        # fewer candidates than k even over the whole prescan: no seed
+        return jnp.full((m,), -jnp.inf, jnp.float32)
+    best = jax.lax.top_k(ub, n_pre)[1]                  # [m, n_pre]
+    blk = db_blocks[best].reshape(m, n_pre * bs, d)
+    vb = valid_blocks[best].reshape(m, n_pre * bs)
+    scores = jnp.einsum("md,mcd->mc", qn, blk)
     scores = jnp.where(vb, scores, -jnp.inf)
     tau = jax.lax.top_k(scores, k)[0][:, -1]
     return jnp.where(jnp.isfinite(tau), tau, -jnp.inf)
@@ -129,7 +156,8 @@ def best_first_order(ub: Array) -> Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "prune", "warm_start", "best_first", "element_stats"),
+    static_argnames=("k", "prune", "warm_start", "best_first", "element_stats",
+                     "warm_start_blocks"),
 )
 def scan_search(
     index: BlockIndex,
@@ -142,13 +170,17 @@ def scan_search(
     warm_start: bool = False,
     best_first: bool = False,
     element_stats: bool = False,
+    warm_start_blocks: int | None = None,
 ):
-    """Pure-JAX block scan (the portable backend; see DESIGN.md §2).
+    """Pure-JAX block scan (the portable backend; DESIGN.md §2 for the block
+    granularity, §3.3 for the backend contract this implements).
 
     Returns ``(top_s [m,k], pos [m,k] padded-row positions, blk_pruned,
     elem_pruned)`` — id mapping and stats normalization happen in the
     engine.  Pruned matmuls are computed-and-masked (XLA has no
     data-dependent skip); the kernel backend actually skips them.
+    ``warm_start_blocks`` widens the τ prescan beyond the ``ceil(k / bs)``
+    floor (DESIGN.md §3.4).
     """
     m = qn.shape[0]
     nb, bs = index.n_blocks, index.block_size
@@ -163,8 +195,9 @@ def scan_search(
         ub_all = kref.block_bounds(qp, index.dp_min, index.dp_max)  # [m, nb]
 
     tau0 = jnp.full((m,), -jnp.inf, jnp.float32)
-    if warm_start and bs >= k:
-        tau0 = tau_warm_start(qn, db_blocks, valid_blocks, ub_all, k)
+    if warm_start:
+        n_pre = prescan_blocks(k, bs, nb, warm_start_blocks)
+        tau0 = tau_warm_start(qn, db_blocks, valid_blocks, ub_all, k, n_pre)
 
     # when the bound matrix already exists (warm start / best-first), feed
     # it through the scan instead of re-evaluating Eq. 13 per block
@@ -237,7 +270,8 @@ def _resolve_bn(index: BlockIndex, bn: int | None) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("k", "bm", "bn", "prune", "sort_queries", "warm_start",
-                     "best_first", "margin", "interpret"),
+                     "best_first", "margin", "interpret", "element_stats",
+                     "warm_start_blocks"),
 )
 def kernel_search(
     index: BlockIndex,
@@ -253,15 +287,23 @@ def kernel_search(
     best_first: bool = False,
     margin: float = 4e-7,
     interpret: bool | None = None,
+    element_stats: bool = False,
+    warm_start_blocks: int | None = None,
 ):
     """Fused Pallas backend (see :mod:`repro.kernels.cosine_topk`).
 
     Returns ``(sims [m,k], pos [m,k] padded-row positions, computed
-    [m_tiles, n_tiles])``.  ``sort_queries`` groups queries by nearest
-    pivot so BM-row tiles are angularly coherent (the kernel prunes a db
-    tile only when *no* query in the tile needs it); results are unsorted
-    before returning.  ``best_first`` hands the kernel a per-query-tile
-    block visiting order (scalar-prefetched index map).
+    [m_tiles, n_tiles], elem_pruned)`` — ``elem_pruned`` is the [m_tiles,
+    n_tiles] per-tile count of (query, row) pairs whose individual Eq. 13
+    bound prunes them, or ``None`` unless ``element_stats``.
+    ``sort_queries`` groups queries by nearest pivot so BM-row tiles are
+    angularly coherent (the kernel prunes a db tile only when *no* query in
+    the tile needs it); results are unsorted before returning.
+    ``best_first`` hands the kernel a per-query-tile block visiting order
+    (scalar-prefetched index map).  ``warm_start_blocks`` widens the τ
+    prescan beyond ``ceil(k / bn)`` kernel tiles (DESIGN.md §3.4); the
+    prescan granularity here is the *kernel tile* (bn rows), not the index
+    block.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -278,10 +320,11 @@ def kernel_search(
     if warm_start or best_first:
         ub = kref.block_bounds(qp, lo, hi)                    # [m, n_tiles]
     tau_init = None
-    if warm_start and bn >= k:
+    if warm_start:
         db_tiles = index.db.reshape(-1, bn, index.db.shape[-1])
         valid_tiles = index.valid.reshape(-1, bn)
-        tau_init = tau_warm_start(qn, db_tiles, valid_tiles, ub, k)
+        n_pre = prescan_blocks(k, bn, db_tiles.shape[0], warm_start_blocks)
+        tau_init = tau_warm_start(qn, db_tiles, valid_tiles, ub, k, n_pre)
     block_order = None
     if best_first:
         mp = -(-m // bm) * bm
@@ -290,15 +333,17 @@ def kernel_search(
         tile_ub = ub_p.reshape(mp // bm, bm, nt).max(axis=1)  # [m_tiles, nt]
         block_order = jnp.argsort(-tile_ub, axis=1).astype(jnp.int32)
 
-    sims, pos, computed = cosine_topk.pruned_topk(
+    sims, pos, computed, elem = cosine_topk.pruned_topk(
         qn, index.db, qp, lo, hi, n_valid,
         tau_init=tau_init, block_order=block_order,
+        dp=index.dp if element_stats else None,
         k=k, bm=bm, bn=bn, margin=margin, prune=prune, interpret=interpret,
+        element_stats=element_stats,
     )
     if sort_queries:
         inv = jnp.argsort(perm)
         sims, pos = sims[inv], pos[inv]
-    return sims, pos, computed
+    return sims, pos, computed, elem
 
 
 # ---------------------------------------------------------------------------
@@ -329,7 +374,8 @@ class ScanBackend:
         s, pos, blk_pruned, elem_pruned = scan_search(
             eng.index, qn, qp, k, prune=prune, margin=eng.margin,
             warm_start=eng.warm_start, best_first=eng.best_first,
-            element_stats=element_stats)
+            element_stats=element_stats,
+            warm_start_blocks=eng.warm_start_blocks)
         ids = map_row_ids(eng.index.row_ids, pos)
         m, nb = qn.shape[0], eng.index.n_blocks
         # raw stats stay jnp scalars: engine.search converts to host floats
@@ -348,15 +394,20 @@ class KernelBackend:
 
     def run(self, eng, queries, k, *, prune=True, element_stats=False):
         qn, qp = prep_queries(eng.index, queries)
-        s, pos, computed = kernel_search(
+        s, pos, computed, elem = kernel_search(
             eng.index, qn, qp, k, bm=eng.bm, bn=eng.bn, prune=prune,
             sort_queries=eng.sort_queries, warm_start=eng.warm_start,
             best_first=eng.best_first, margin=eng.margin,
-            interpret=eng.interpret)
+            interpret=eng.interpret, element_stats=element_stats,
+            warm_start_blocks=eng.warm_start_blocks)
         ids = map_row_ids(eng.index.row_ids, pos)
         frac = computed.mean()
-        return s, ids, {"block_prune_frac": 1.0 - frac,
-                        "tile_computed_frac": frac}
+        raw = {"block_prune_frac": 1.0 - frac, "tile_computed_frac": frac}
+        if element_stats:
+            m = qn.shape[0]
+            raw["elem_prune_frac"] = (
+                elem.astype(jnp.float32).sum() / (m * max(1, eng.n_valid)))
+        return s, ids, raw
 
 
 @register_backend("brute")
@@ -369,7 +420,13 @@ class BruteBackend:
         qn, _ = prep_queries(eng.index, queries)
         s, pos = brute_search(eng.index, qn, k)
         ids = map_row_ids(eng.index.row_ids, pos)
-        return s, ids, {"block_prune_frac": 0.0}
+        raw = {"block_prune_frac": 0.0}
+        if element_stats:
+            # brute force evaluates no bounds and skips nothing — the
+            # element pruning fraction is 0 by definition (glossary in
+            # docs/search-api.md)
+            raw["elem_prune_frac"] = 0.0
+        return s, ids, raw
 
 
 @register_backend("sharded")
@@ -381,12 +438,17 @@ class ShardedBackend:
     def run(self, eng, queries, k, *, prune=True, element_stats=False):
         if eng.mesh is None:
             raise ValueError("the 'sharded' backend needs SearchEngine(mesh=...)")
-        fn = eng._sharded_fn
+        fn = eng._sharded_fn.get(element_stats)
         if fn is None:
             from repro.core.distributed import make_sharded_search
             fn = make_sharded_search(
                 eng.mesh, eng.axis_names, with_stats=True,
-                warm_start=eng.warm_start, best_first=eng.best_first)
-            eng._sharded_fn = fn
-        s, ids, frac = fn(eng.index, jnp.asarray(queries, jnp.float32), k)
-        return s, ids, {"block_prune_frac": frac}
+                warm_start=eng.warm_start, best_first=eng.best_first,
+                warm_start_blocks=eng.warm_start_blocks,
+                element_stats=element_stats)
+            eng._sharded_fn[element_stats] = fn
+        s, ids, frac, efrac = fn(eng.index, jnp.asarray(queries, jnp.float32), k)
+        raw = {"block_prune_frac": frac}
+        if element_stats:
+            raw["elem_prune_frac"] = efrac
+        return s, ids, raw

@@ -66,9 +66,19 @@ class SearchEngine:
       backend: registered backend name, or ``"auto"`` (default).
       mesh / axis_names: mesh placement for the ``sharded`` backend.
       warm_start: seed each query's running k-th-best τ by exact-scoring
-        its single best-bound block before the main pass (every backend).
+        its ``ceil(k / block)`` best-bound blocks before the main pass
+        (every backend; the multi-block schedule is DESIGN.md §3.4, so the
+        seeding engages for every ``k``, including ``k`` > block size).
+      warm_start_blocks: widen the warm-start prescan to at least this many
+        bound-ranked blocks (default: the ``ceil(k / block)`` floor).  More
+        blocks = a tighter τ seed at the cost of a larger prescan gather;
+        never fewer than the floor, clamped to the block count.
       best_first: visit database blocks in descending upper-bound order
         (per query tile) so τ rises early and later blocks prune.
+      element_stats: default for ``search(..., element_stats=...)`` — also
+        report ``SearchStats.elem_prune_frac``, the fraction of (query,
+        valid row) pairs whose *individual* Eq. 13 bound prunes them
+        (backend-uniform; see docs/search-api.md for the glossary).
       margin: fp32 guard added to bounds before comparing with τ.
       bm / bn / sort_queries / interpret: kernel-backend tile options
         (ignored by other backends).
@@ -82,7 +92,9 @@ class SearchEngine:
         mesh=None,
         axis_names=None,
         warm_start: bool = True,
+        warm_start_blocks: int | None = None,
         best_first: bool = True,
+        element_stats: bool = False,
         margin: float = 4e-7,
         bm: int = 128,
         bn: int | None = None,
@@ -93,13 +105,15 @@ class SearchEngine:
         self.mesh = mesh
         self.axis_names = axis_names
         self.warm_start = warm_start
+        self.warm_start_blocks = warm_start_blocks
         self.best_first = best_first
+        self.element_stats = element_stats
         self.margin = margin
         self.bm = bm
         self.bn = bn
         self.sort_queries = sort_queries
         self.interpret = interpret
-        self._sharded_fn = None
+        self._sharded_fn = {}
         self.backend_name = (auto_backend(index, mesh)
                              if backend == "auto" else backend)
         self.backend = _bk.get_backend(self.backend_name)
@@ -145,13 +159,17 @@ class SearchEngine:
 
     # ------------------------------------------------------------ searching
     def search(self, queries, k: int, *, prune: bool = True,
-               element_stats: bool = False):
+               element_stats: bool | None = None):
         """Exact top-k: ``(sims [m,k] f32, ids [m,k] i32, SearchStats)``.
 
         ``ids`` are original database row ids (-1 marks empty slots when
         ``k`` exceeds the number of valid rows).  The result set is
         identical to brute force for every backend and policy setting.
+        ``element_stats`` defaults to the engine-level knob; pass True to
+        also get ``SearchStats.elem_prune_frac`` for this call.
         """
+        if element_stats is None:
+            element_stats = self.element_stats
         sims, ids, raw = self.backend.run(
             self, queries, k, prune=prune, element_stats=element_stats)
         stats = SearchStats(

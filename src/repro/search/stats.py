@@ -28,8 +28,17 @@ class SearchStats:
     index block) pair; for the kernel backend it is a (query tile, kernel
     tile) pair (``1 - tile_computed_frac``); for the sharded backend it is
     the mean over shards of the local scan fraction; brute force is 0 by
-    definition.  The τ warm-start pre-scan (one block per query) is not
-    counted as pruned or computed work.
+    definition.  The τ warm-start pre-scan (``ceil(k / block)`` blocks per
+    query, DESIGN.md §3.4) is not counted as pruned or computed work.
+
+    ``elem_prune_frac`` (requires ``element_stats``) is backend-uniform:
+    the fraction of (query, valid row) pairs whose *individual* Eq. 13
+    bound fell below the query's running τ at the moment the row's block
+    was visited — the pruning a scalar per-point index (LAESA) would have
+    achieved with the same pivots and visit order.  All four backends
+    report it over the same denominator ``n_queries * n_valid_rows``
+    (sharded: psum of counts over psum of valid rows); brute force is 0 by
+    definition.  Full glossary: docs/search-api.md.
     """
 
     backend: str

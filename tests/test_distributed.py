@@ -61,12 +61,21 @@ def test_search_engine_sharded_backend():
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         eng = SearchEngine.build(db, n_pivots=8, block_size=64, mesh=mesh)
         assert eng.backend_name == "sharded"
-        s, i, stats = eng.search(jnp.asarray(q), 7)
+        s, i, stats = eng.search(jnp.asarray(q), 7, element_stats=True)
         sref, iref = ref.brute_force_knn(q, db, 7)
         np.testing.assert_allclose(np.asarray(s), sref, atol=2e-5)
         assert (np.asarray(i) == iref).mean() > 0.98
         assert 0.0 <= stats.block_prune_frac <= 1.0
-        print("ok, shard prune_frac", stats.block_prune_frac)
+        # element stats are backend-uniform: the sharded path reports the
+        # global (psum-weighted) element-prune fraction too
+        assert 0.0 < float(stats.elem_prune_frac) <= 1.0
+        # k > per-shard block size: the multi-block tau prescan engages on
+        # every shard and the merge stays exact
+        s2, i2, st2 = eng.search(jnp.asarray(q), 80)
+        sref2, _ = ref.brute_force_knn(q, db, 80)
+        np.testing.assert_allclose(np.asarray(s2), sref2, atol=2e-5)
+        print("ok, shard prune_frac", stats.block_prune_frac,
+              "elem", float(stats.elem_prune_frac))
     """)
 
 

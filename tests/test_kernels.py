@@ -87,9 +87,35 @@ def test_raw_kernel_interface(rng):
     bn = 64
     lo = dp.reshape(-1, bn, 4).min(1)
     hi = dp.reshape(-1, bn, 4).max(1)
-    s, i, computed = pruned_topk(
+    s, i, computed, elem = pruned_topk(
         jnp.asarray(q), jnp.asarray(db), jnp.asarray(qp), jnp.asarray(lo),
         jnp.asarray(hi), 256, k=4, bm=8, bn=bn, interpret=True)
+    assert elem is None                     # element_stats off by default
     sref, iref = cref.brute_force_knn(q, db, 4)
     np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
     assert (np.asarray(i) == iref).mean() > 0.98
+
+
+def test_raw_kernel_element_counter(rng):
+    """element_stats=True: per-tile pruned-element counts are sane and the
+    result set is unchanged."""
+    db = clustered(rng, 512, 16, n_centers=4, noise=0.05)
+    q = db[:8] + 0.01 * rng.normal(size=(8, 16)).astype(np.float32)
+    q = cref.normalize(q).astype(np.float32)
+    piv = db[:: 512 // 8][:8]
+    qp = (q @ piv.T).astype(np.float32)
+    dp = (db @ piv.T).astype(np.float32)
+    bn = 64
+    lo = dp.reshape(-1, bn, 8).min(1)
+    hi = dp.reshape(-1, bn, 8).max(1)
+    s, i, computed, elem = pruned_topk(
+        jnp.asarray(q), jnp.asarray(db), jnp.asarray(qp), jnp.asarray(lo),
+        jnp.asarray(hi), 512, dp=jnp.asarray(dp), k=4, bm=8, bn=bn,
+        interpret=True, element_stats=True)
+    sref, _ = cref.brute_force_knn(q, db, 4)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    elem = np.asarray(elem)
+    assert elem.shape == computed.shape
+    assert (elem >= 0).all() and (elem <= 8 * bn).all()
+    # clustered near-duplicate queries: τ rises fast, some elements prune
+    assert elem.sum() > 0

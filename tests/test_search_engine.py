@@ -100,6 +100,97 @@ def test_warm_start_and_best_first_improve_pruning(rng):
     assert kt1.tile_computed_frac <= kt0.tile_computed_frac + 1e-6
 
 
+def test_warm_start_engages_beyond_block_size(rng):
+    """k > block_size: the multi-block prescan seeds τ instead of the old
+    auto-disable, results stay exact, and pruning measurably improves."""
+    db = clustered(rng, 2048, 24, n_centers=6, noise=0.05)
+    q = db[::256] + 0.01 * rng.normal(size=(8, 24)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=32)
+    k = 48                                     # > block_size = 32
+    sref, iref = ref.brute_force_knn(np.asarray(q), db, k)
+    cold = SearchEngine(idx, backend="scan", warm_start=False,
+                        best_first=False)
+    warm = SearchEngine(idx, backend="scan", warm_start=True,
+                        best_first=False)
+    _, _, st0 = cold.search(jnp.asarray(q), k)
+    s, i, st1 = warm.search(jnp.asarray(q), k)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    assert _sets_equal(i, iref) > 0.98
+    assert st1.block_prune_frac > st0.block_prune_frac, (
+        st0.block_prune_frac, st1.block_prune_frac)
+
+
+def test_warm_start_multiblock_seed_is_finite(rng):
+    """The prescan covers ceil(k/bs) blocks, so every query gets a real
+    τ seed even when k exceeds the block size."""
+    from repro.kernels import ref as kref
+    from repro.search.backends import (prep_queries, prescan_blocks,
+                                       tau_warm_start)
+    db = clustered(rng, 512, 16)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
+    qn, qp = prep_queries(idx, jnp.asarray(db[:5]))
+    nb, bs = idx.n_blocks, idx.block_size
+    ub = kref.block_bounds(qp, idx.dp_min, idx.dp_max)
+    db_blocks = idx.db.reshape(nb, bs, -1)
+    valid_blocks = idx.valid.reshape(nb, bs)
+    k = 3 * bs + 1
+    n_pre = prescan_blocks(k, bs, nb)
+    assert n_pre == 4                          # ceil(k / bs)
+    tau = tau_warm_start(qn, db_blocks, valid_blocks, ub, k, n_pre)
+    assert np.isfinite(np.asarray(tau)).all()
+    # and each seed is a true lower bound on the final kth-best similarity
+    sref, _ = ref.brute_force_knn(db[:5], db, k)
+    assert (np.asarray(tau) <= sref[:, -1] + 1e-6).all()
+
+
+def test_warm_start_blocks_widens_prescan(rng):
+    """warm_start_blocks only ever widens: tighter or equal seeds, exact
+    results."""
+    db = clustered(rng, 2048, 24, n_centers=6, noise=0.05)
+    q = db[::256] + 0.01 * rng.normal(size=(8, 24)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=64)
+    sref, _ = ref.brute_force_knn(np.asarray(q), db, 10)
+    narrow = SearchEngine(idx, backend="scan", best_first=False)
+    wide = SearchEngine(idx, backend="scan", best_first=False,
+                        warm_start_blocks=4)
+    _, _, st_n = narrow.search(jnp.asarray(q), 10)
+    s, _, st_w = wide.search(jnp.asarray(q), 10)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    assert st_w.block_prune_frac >= st_n.block_prune_frac - 1e-6
+
+
+def test_elem_prune_frac_scan_kernel_agree(rng):
+    """Backend-uniform element stats: with matched granularity (bn = index
+    block size, one query tile) the scan and kernel backends report the
+    same elem_prune_frac on clustered data."""
+    db = clustered(rng, 2048, 32, n_centers=6, noise=0.05)
+    q = db[::64] + 0.01 * rng.normal(size=(32, 32)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+    scan = SearchEngine(idx, backend="scan")
+    kern = SearchEngine(idx, backend="kernel", bm=32, bn=64)
+    _, _, st_s = scan.search(jnp.asarray(q), 10, element_stats=True)
+    _, _, st_k = kern.search(jnp.asarray(q), 10, element_stats=True)
+    es, ek = float(st_s.elem_prune_frac), float(st_k.elem_prune_frac)
+    assert es > 0.3, es                        # clustered data must prune
+    assert abs(es - ek) < 0.02, (es, ek)
+
+
+def test_elem_prune_frac_reported_by_all_backends(rng):
+    """element_stats=True yields a [0, 1] elem_prune_frac from every local
+    backend (sharded covered in test_distributed.py), via the engine-level
+    knob as well as the per-call override."""
+    db = clustered(rng, 1024, 16)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=64)
+    for backend in LOCAL_BACKENDS:
+        eng = SearchEngine(idx, backend=backend, bm=8, element_stats=True)
+        _, _, stats = eng.search(jnp.asarray(db[:4]), 5)
+        assert stats.elem_prune_frac is not None, backend
+        assert 0.0 <= float(stats.elem_prune_frac) <= 1.0, backend
+        # per-call override wins over the engine default
+        _, _, off = eng.search(jnp.asarray(db[:4]), 5, element_stats=False)
+        assert off.elem_prune_frac is None, backend
+
+
 def test_stats_dict_compat(rng):
     db = clustered(rng, 1000, 16)
     idx = build_index(jnp.asarray(db), n_pivots=8, block_size=64)

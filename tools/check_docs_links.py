@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Fail CI on broken cross-file links in the repo's markdown docs.
+
+Scans every tracked ``*.md`` file for inline markdown links and checks
+that relative targets exist on disk (resolved against the linking file's
+directory).  External links (http/https/mailto) and pure in-page anchors
+(``#section``) are skipped; an anchor suffix on a file link is stripped
+before the existence check.  Exit code 1 with one line per broken link.
+
+Usage: python tools/check_docs_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", ".venv", "node_modules", "__pycache__"}
+
+
+def iter_md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def check(root: Path) -> list[str]:
+    errors = []
+    for md in iter_md_files(root):
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not (md.parent / rel).resolve().exists():
+                    errors.append(
+                        f"{md.relative_to(root)}:{lineno}: broken link "
+                        f"-> {target}")
+    return errors
+
+
+if __name__ == "__main__":
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    errors = check(root.resolve())
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    print(f"docs links ok ({root.resolve().name})")
