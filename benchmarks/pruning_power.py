@@ -2,12 +2,19 @@
 experiment (§4: "we will not investigate the actual performance in a
 similarity index here, but plan to do this in future work").
 
-Three structures x two bound families, on three data regimes:
+Four structures x two bound families, on three data regimes:
   * VP-tree (paper-faithful CPU index): exact-similarity fraction computed
     with the Eq. 13 (mult) vs reverse-Eq. 7 (euclid) subtree bounds,
   * scalar LAESA (per-point pivot table): the reference pruning ceiling,
   * the unified SearchEngine (scan + Pallas kernel backends), natural-order
-    baseline vs τ warm-start + best-first block ordering.
+    baseline vs τ warm-start + best-first block ordering,
+  * the array-encoded pivot tree (``backend="tree"``, DESIGN.md §3.5):
+    transitive Eq. 13 descent over block subtrees — the TPU-shaped
+    answer to the VP-tree, measured on the same regimes.
+
+``*_matches_brute`` rows are exactness gates (1.0 = identical result set
+to float64 brute force); ``tools/check_bench_regression.py`` hard-fails
+CI when any of them moves off 1.0, and tolerance-bands the fractions.
 
 Regimes: uniform high-dim (concentration -> little pruning, expected per the
 paper's own curse-of-dimensionality discussion), clustered embeddings (the
@@ -50,6 +57,13 @@ def _datasets(n=3000, d=64, seed=0, regimes=("uniform", "clustered", "dedup")):
     return out
 
 
+def _matches_brute(sims, db, q, k) -> float:
+    """Exactness gate: 1.0 iff the similarity profile equals fp64 brute
+    force (set-identical results; id permutations on ties are fine)."""
+    sref, _ = ref.brute_force_knn(np.asarray(q), db, k)
+    return float(np.allclose(np.asarray(sims), sref, atol=3e-5))
+
+
 def run(k: int = 10, n_queries: int = 32, *, quick: bool = False):
     rows = []
     rng = np.random.default_rng(1)
@@ -87,10 +101,40 @@ def run(k: int = 10, n_queries: int = 32, *, quick: bool = False):
 
         # engine defaults: τ warm-start + best-first block ordering
         eng = SearchEngine(idx, backend="scan")
-        _, _, st1 = eng.search(qj, k)
+        s_scan, _, st1 = eng.search(qj, k)
         rows.append((f"pruning/{regime}/block_prune_frac_engine",
                      st1.block_prune_frac,
                      "scan, tau warm-start + best-first"))
+        rows.append((f"pruning/{regime}/scan_matches_brute",
+                     _matches_brute(s_scan, db, q, k),
+                     "exactness gate: must be 1.0"))
+
+        # pivot tree: transitive Eq. 13 descent, flat scan leaf stage
+        treng = SearchEngine(idx, backend="tree", leaf_eval="scan")
+        s_tree, _, st_t = treng.search(qj, k)
+        rows.append((f"pruning/{regime}/tree_prune_frac",
+                     st_t.tree_prune_frac,
+                     "pivot-tree transitive descent alone"))
+        rows.append((f"pruning/{regime}/block_prune_frac_tree",
+                     st_t.block_prune_frac,
+                     "tree total (descent + leaf stage); >= scan engine"))
+        rows.append((f"pruning/{regime}/tree_node_eval_frac",
+                     st_t.extras["tree_node_eval_frac"],
+                     "bound evals the descent needed (lower = better)"))
+        rows.append((f"pruning/{regime}/tree_matches_brute",
+                     _matches_brute(s_tree, db, q, k),
+                     "exactness gate: must be 1.0"))
+
+        # pivot tree with the Pallas leaf-gather stage: the kernel grid
+        # shrinks to the union of surviving leaves
+        trk = SearchEngine(idx, backend="tree", leaf_eval="kernel", bm=8)
+        s_trk, _, st_k = trk.search(qj, k)
+        rows.append((f"pruning/{regime}/tree_kernel_tile_computed_frac",
+                     st_k.tile_computed_frac,
+                     "Pallas leaf-gather stage, over the full grid"))
+        rows.append((f"pruning/{regime}/tree_kernel_matches_brute",
+                     _matches_brute(s_trk, db, q, k),
+                     "exactness gate: must be 1.0"))
 
         kern0 = SearchEngine(idx, backend="kernel", bm=8, warm_start=False,
                              best_first=False)

@@ -180,6 +180,7 @@ def search(
     prune: bool = True,
     margin: float = 4e-7,
     element_stats: bool = False,
+    **unsupported,
 ):
     """Deprecated: use :class:`repro.search.SearchEngine`.
 
@@ -192,7 +193,20 @@ def search(
                              ``element_stats``; upper bound on finer-grained
                              pruning available to a scalar CPU index).
     The result is exact: identical set to brute force (see tests).
+
+    Engine-level knobs (``warm_start``, ``best_first``, ``backend``, ...)
+    are intentionally NOT forwarded: accepting them here and silently
+    ignoring them would return different pruning stats than the caller
+    asked for, so they raise :class:`TypeError` with the migration hint.
     """
+    if unsupported:
+        raise TypeError(
+            f"repro.core.index.search() got unsupported keyword argument(s) "
+            f"{sorted(unsupported)}; this deprecated shim only accepts "
+            f"prune/margin/element_stats. Engine-level knobs (warm_start, "
+            f"best_first, warm_start_blocks, backend, ...) belong to "
+            f"repro.search.SearchEngine — see the migration table in "
+            f"docs/search-api.md.")
     import warnings
     warnings.warn(
         "repro.core.index.search is deprecated; use "

@@ -4,11 +4,14 @@
              best-first ordering, stats, id mapping)
   backends — registry + the ``scan`` / ``kernel`` / ``sharded`` / ``brute``
              inner loops
+  tree     — the hierarchical pivot-tree backend (``backend="tree"``):
+             transitive Eq. 13 descent over an array-encoded balanced tree
   stats    — the one :class:`SearchStats` dataclass every path returns
 
-See DESIGN.md §3 for the backend contract.
+See DESIGN.md §3 for the backend contract and §3.5 for the tree descent.
 """
 from repro.search.backends import (available_backends, get_backend,  # noqa: F401
                                    register_backend)
 from repro.search.engine import SearchEngine, auto_backend  # noqa: F401
 from repro.search.stats import SearchStats  # noqa: F401
+from repro.search.tree import TreeIndex, build_tree  # noqa: F401

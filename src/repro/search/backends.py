@@ -40,6 +40,7 @@ __all__ = [
     "register_backend", "get_backend", "available_backends",
     "prep_queries", "map_row_ids", "scan_search", "kernel_search",
     "brute_search", "tau_warm_start", "prescan_blocks", "coarsen_intervals",
+    "query_sort_perm",
 ]
 
 _REGISTRY: dict[str, object] = {}
@@ -140,6 +141,17 @@ def tau_warm_start(qn: Array, db_blocks: Array, valid_blocks: Array,
     return jnp.where(jnp.isfinite(tau), tau, -jnp.inf)
 
 
+def query_sort_perm(qp: Array) -> Array:
+    """Permutation grouping queries by nearest pivot (desc sim within group).
+
+    The kernel paths skip a db tile only when *no* query in the BM-row
+    tile needs it — angularly coherent query tiles are what let that OR
+    fire.  Shared by the flat kernel backend and the tree backend's
+    kernel leaf stage so the two paths can never diverge in grouping.
+    """
+    return jnp.lexsort((-jnp.max(qp, axis=1), jnp.argmax(qp, axis=1)))
+
+
 def best_first_order(ub: Array) -> Array:
     """Blocks permuted by descending upper bound, aggregated over queries.
 
@@ -171,6 +183,9 @@ def scan_search(
     best_first: bool = False,
     element_stats: bool = False,
     warm_start_blocks: int | None = None,
+    tau0: Array | None = None,
+    ub_all: Array | None = None,
+    leaf_mask: Array | None = None,
 ):
     """Pure-JAX block scan (the portable backend; DESIGN.md §2 for the block
     granularity, §3.3 for the backend contract this implements).
@@ -181,6 +196,15 @@ def scan_search(
     data-dependent skip); the kernel backend actually skips them.
     ``warm_start_blocks`` widens the τ prescan beyond the ``ceil(k / bs)``
     floor (DESIGN.md §3.4).
+
+    The three optional arrays let a hierarchical caller (the ``tree``
+    backend, DESIGN.md §3.5) reuse this loop as its leaf stage: ``tau0``
+    [m] overrides the internal τ warm-start seed (must be a true lower
+    bound on each query's final k-th best, or -inf), ``ub_all`` [m, nb]
+    supplies an already-computed block bound matrix (the descent's last
+    level) so it is not re-evaluated here, and ``leaf_mask`` [m, nb] marks
+    blocks a caller has *proven* prunable (mask False ⇒ skipped and
+    counted in ``blk_pruned``; exactness is the caller's obligation).
     """
     m = qn.shape[0]
     nb, bs = index.n_blocks, index.block_size
@@ -190,22 +214,27 @@ def scan_search(
     base_idx = (jnp.arange(nb)[:, None] * bs
                 + jnp.arange(bs)[None, :]).astype(jnp.int32)
 
-    ub_all = None
-    if warm_start or best_first:
+    if ub_all is None and (warm_start or best_first):
         ub_all = kref.block_bounds(qp, index.dp_min, index.dp_max)  # [m, nb]
 
-    tau0 = jnp.full((m,), -jnp.inf, jnp.float32)
-    if warm_start:
-        n_pre = prescan_blocks(k, bs, nb, warm_start_blocks)
-        tau0 = tau_warm_start(qn, db_blocks, valid_blocks, ub_all, k, n_pre)
+    if tau0 is None:
+        tau0 = jnp.full((m,), -jnp.inf, jnp.float32)
+        if warm_start:
+            n_pre = prescan_blocks(k, bs, nb, warm_start_blocks)
+            tau0 = tau_warm_start(qn, db_blocks, valid_blocks, ub_all, k,
+                                  n_pre)
 
-    # when the bound matrix already exists (warm start / best-first), feed
-    # it through the scan instead of re-evaluating Eq. 13 per block
+    # when the bound matrix already exists (warm start / best-first / a tree
+    # descent), feed it through the scan instead of re-evaluating Eq. 13 per
+    # block
     reuse_ub = prune and ub_all is not None
+    has_mask = leaf_mask is not None
     xs = (db_blocks, dp_blocks, valid_blocks, base_idx,
           index.dp_min, index.dp_max)
     if reuse_ub:
         xs = xs + (ub_all.T,)                                 # [nb, m]
+    if has_mask:
+        xs = xs + (leaf_mask.T,)                              # [nb, m]
     if best_first:
         order = best_first_order(ub_all)
         xs = tuple(a[order] for a in xs)
@@ -219,16 +248,20 @@ def scan_search(
 
     def step(carry, x):
         top_s, top_i, blk_pruned, elem_pruned = carry
+        blk, dpb, vb, bidx, lo, hi = x[:6]
+        rest = x[6:]
         if reuse_ub:
-            blk, dpb, vb, bidx, lo, hi, ub = x                # ub: [m]
+            ub, rest = rest[0], rest[1:]                      # [m]
         else:
-            blk, dpb, vb, bidx, lo, hi = x
             ub = block_upper_bound(qp, lo, hi) if prune else None
+        lmask = rest[0] if has_mask else None                 # [m] bool
         tau = top_s[:, -1]                                    # running kth best
         if prune:
             needed = ub + margin >= tau
         else:
             needed = jnp.ones((m,), bool)
+        if has_mask:
+            needed = needed & lmask
         scores = qn @ blk.T                                   # [m, bs]
         scores = jnp.where(vb[None, :], scores, -jnp.inf)
         scores = jnp.where(needed[:, None], scores, -jnp.inf)
@@ -312,7 +345,7 @@ def kernel_search(
     lo, hi = coarsen_intervals(index.dp_min, index.dp_max, factor)
     m = qn.shape[0]
     if sort_queries:
-        perm = jnp.lexsort((-jnp.max(qp, axis=1), jnp.argmax(qp, axis=1)))
+        perm = query_sort_perm(qp)
         qn, qp = qn[perm], qp[perm]
     n_valid = index.valid.sum().astype(jnp.int32)
 
@@ -452,3 +485,10 @@ class ShardedBackend:
         if element_stats:
             raw["elem_prune_frac"] = efrac
         return s, ids, raw
+
+
+# the tree backend lives in its own module (it is a subsystem, not an inner
+# loop) but registers here; importing it last keeps the registry complete for
+# callers that import repro.search.backends directly.  Safe despite the cycle:
+# this module is fully defined by the time the import runs.
+from repro.search import tree as _tree  # noqa: E402,F401  (registration)

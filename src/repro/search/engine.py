@@ -3,9 +3,10 @@
 The paper's Eq. 13 bound is shared infrastructure; what used to differ per
 path (argument conventions, stats shapes, pruning plumbing, warm-start
 availability) is now owned here.  Backends (``scan`` / ``kernel`` /
-``sharded`` / ``brute``) are pluggable and auto-selected by device, mesh,
-and shape; each one is just an inner loop (see
-:mod:`repro.search.backends`).
+``sharded`` / ``brute`` / ``tree``) are pluggable and auto-selected by
+device, mesh, and shape; each one is just an inner loop (see
+:mod:`repro.search.backends`; the hierarchical ``tree`` backend is the
+subsystem in :mod:`repro.search.tree`).
 
 Usage::
 
@@ -34,7 +35,9 @@ __all__ = ["SearchEngine", "auto_backend"]
 #: below this many padded rows the matmul is cheaper than any bookkeeping
 _BRUTE_MAX_ROWS = 256
 
-
+#: at this many blocks the flat O(n_blocks) bound pass starts to dominate
+#: and the tree's O(survivors · depth) transitive descent wins
+_TREE_MIN_BLOCKS = 256
 
 
 def auto_backend(index: BlockIndex, mesh=None) -> str:
@@ -44,6 +47,10 @@ def auto_backend(index: BlockIndex, mesh=None) -> str:
                ``build_sharded_index``) or a mesh was supplied;
     brute    — tiny datastore (bound evaluation would dominate);
     kernel   — on TPU, MXU-shaped work with VMEM-resident feature dim;
+    tree     — deep datastores (≥ 256 blocks): the transitive Eq. 13
+               descent (DESIGN.md §3.5) replaces the flat per-block bound
+               pass, which at that depth dominates the work on clustered
+               data;
     scan     — everywhere else (CPU/GPU, odd shapes): same pruning
                semantics, XLA-portable.
     """
@@ -54,6 +61,8 @@ def auto_backend(index: BlockIndex, mesh=None) -> str:
         return "brute"
     if jax.default_backend() == "tpu" and d <= 4096:
         return "kernel"
+    if index.dp_min.shape[-2] >= _TREE_MIN_BLOCKS:
+        return "tree"
     return "scan"
 
 
@@ -80,8 +89,14 @@ class SearchEngine:
         valid row) pairs whose *individual* Eq. 13 bound prunes them
         (backend-uniform; see docs/search-api.md for the glossary).
       margin: fp32 guard added to bounds before comparing with τ.
+      leaf_eval: tree-backend leaf stage — ``"scan"`` (portable, traceable
+        inside an outer jit), ``"kernel"`` (compact the surviving leaves
+        and run the fused Pallas kernel over just those rows;
+        host-orchestrated), or ``"auto"`` (kernel on TPU, scan elsewhere).
+        Ignored by non-tree backends.
       bm / bn / sort_queries / interpret: kernel-backend tile options
-        (ignored by other backends).
+        (ignored by other backends; ``bm`` / ``interpret`` also apply to
+        the tree backend's kernel leaf stage).
     """
 
     def __init__(
@@ -96,6 +111,7 @@ class SearchEngine:
         best_first: bool = True,
         element_stats: bool = False,
         margin: float = 4e-7,
+        leaf_eval: str = "auto",
         bm: int = 128,
         bn: int | None = None,
         sort_queries: bool = True,
@@ -109,11 +125,14 @@ class SearchEngine:
         self.best_first = best_first
         self.element_stats = element_stats
         self.margin = margin
+        self.leaf_eval = leaf_eval
         self.bm = bm
         self.bn = bn
         self.sort_queries = sort_queries
         self.interpret = interpret
         self._sharded_fn = {}
+        self._tree_index = None                 # built lazily by TreeBackend
+        self._tree_valid_nodes = 0              # cached host count, ditto
         self.backend_name = (auto_backend(index, mesh)
                              if backend == "auto" else backend)
         self.backend = _bk.get_backend(self.backend_name)
@@ -180,10 +199,11 @@ class SearchEngine:
             block_prune_frac=raw.get("block_prune_frac", 0.0),
             tile_computed_frac=raw.get("tile_computed_frac"),
             elem_prune_frac=raw.get("elem_prune_frac"),
+            tree_prune_frac=raw.get("tree_prune_frac"),
             warm_start=self.warm_start,
             best_first=self.best_first,
             extras={k_: v for k_, v in raw.items()
                     if k_ not in ("block_prune_frac", "tile_computed_frac",
-                                  "elem_prune_frac")},
+                                  "elem_prune_frac", "tree_prune_frac")},
         )
         return sims, ids, stats

@@ -35,10 +35,18 @@ class SearchStats:
     the fraction of (query, valid row) pairs whose *individual* Eq. 13
     bound fell below the query's running τ at the moment the row's block
     was visited — the pruning a scalar per-point index (LAESA) would have
-    achieved with the same pivots and visit order.  All four backends
-    report it over the same denominator ``n_queries * n_valid_rows``
-    (sharded: psum of counts over psum of valid rows); brute force is 0 by
-    definition.  Full glossary: docs/search-api.md.
+    achieved with the same pivots and visit order.  All backends report it
+    over the same denominator ``n_queries * n_valid_rows`` (sharded: psum
+    of counts over psum of valid rows); brute force is 0 by definition.
+
+    ``tree_prune_frac`` (``tree`` backend only) is the fraction of
+    (query, block) pairs excluded by the *transitive* Eq. 13 descent
+    alone — whole subtrees cut at an internal node before any leaf bound
+    was evaluated (DESIGN.md §3.5).  It is a component of
+    ``block_prune_frac`` (descent-pruned blocks are also counted there),
+    reported separately so the hierarchy's contribution is visible next
+    to the flat leaf-stage pruning.  ``None`` for non-tree backends.
+    Full glossary: docs/search-api.md.
     """
 
     backend: str
@@ -48,6 +56,7 @@ class SearchStats:
     block_prune_frac: float = 0.0
     tile_computed_frac: float | None = None
     elem_prune_frac: float | None = None
+    tree_prune_frac: float | None = None
     warm_start: bool = False
     best_first: bool = False
     extras: dict = field(default_factory=dict)

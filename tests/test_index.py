@@ -125,6 +125,22 @@ def test_build_index_64_pivots_exact(rng):
     _check_exact(db, q, 8, n_pivots=64, block_size=64)
 
 
+def test_search_shim_rejects_engine_kwargs(rng):
+    """The deprecated shim must not swallow engine-level knobs: silently
+    ignoring warm_start/best_first would return stats the caller did not
+    ask for.  TypeError with the SearchEngine migration hint instead."""
+    db = rng.normal(size=(120, 8)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
+    with pytest.raises(TypeError, match=r"warm_start.*SearchEngine"):
+        search(idx, jnp.asarray(db[:2]), 3, warm_start=True)
+    with pytest.raises(TypeError, match="SearchEngine"):
+        search(idx, jnp.asarray(db[:2]), 3, backend="tree", best_first=False)
+    # the supported historical surface still works
+    s, i, stats = search(idx, jnp.asarray(db[:2]), 3, prune=True,
+                         element_stats=True)
+    assert s.shape == (2, 3) and "elem_prune_frac" in stats
+
+
 def test_scalar_reference_pruned_knn(rng):
     """The paper-style scalar LAESA reference is exact and prunes."""
     db = clustered(rng, 800, 16)

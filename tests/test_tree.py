@@ -1,0 +1,260 @@
+"""Pivot-tree backend: structural invariants (hypothesis property tests),
+transitive-bound domination, and brute-force-identical results across leaf
+evaluation paths — the exactness half of DESIGN.md §3.5."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ref
+from repro.core.index import build_index
+from repro.search import SearchEngine, auto_backend, available_backends, build_tree
+from repro.search.backends import prep_queries
+from repro.search.tree import tree_descend, tree_warm_start
+from tests.conftest import clustered
+
+
+def _sets_equal(ids, iref):
+    return (np.sort(np.asarray(ids), 1) == np.sort(iref, 1)).mean()
+
+
+def _adversarial(rng, n, d):
+    """Adversarially clustered: tight duplicate-heavy clusters plus a thin
+    uniform background, the regime where a wrong bound or a stale τ seed
+    would actually change the result set."""
+    n_dup = n // 3
+    base = clustered(rng, n - n_dup, d, n_centers=4, noise=0.01)
+    dup = base[rng.integers(0, len(base), n_dup)] + 1e-4 * rng.normal(
+        size=(n_dup, d)).astype(np.float32)
+    x = np.concatenate([base, dup])
+    return (x / np.linalg.norm(x, axis=1, keepdims=True)).astype(np.float32)
+
+
+def test_tree_backend_registered():
+    assert "tree" in available_backends()
+
+
+def test_auto_selects_tree_for_deep_index(rng):
+    """≥ 256 blocks on CPU: the flat per-block bound pass dominates and
+    auto-selection hands the index to the transitive descent."""
+    db = rng.normal(size=(256 * 32, 8)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
+    assert auto_backend(idx) == "tree"
+    # shallow index keeps the flat scan (regression for the old rule)
+    small = build_index(jnp.asarray(db[:2000]), n_pivots=4, block_size=64)
+    assert auto_backend(small) == "scan"
+
+
+# ---------------------------------------------------------------------------
+# invariant (a): every point lands in exactly one leaf
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(10, 500), st.integers(2, 24), st.integers(0, 1000))
+def test_every_point_in_exactly_one_leaf(n, d, seed):
+    rng = np.random.default_rng(seed)
+    db = rng.normal(size=(n, d)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=min(4, n), block_size=32)
+    tree = build_tree(idx)
+    nb, bs, nl = idx.n_blocks, idx.block_size, tree.n_leaf_slots
+    assert nl >= nb and (nl & (nl - 1)) == 0          # power-of-two leaf row
+    # leaf slot s covers block s: collect original row ids per leaf bucket
+    row_ids = np.asarray(idx.row_ids).reshape(nb, bs)
+    valid = np.asarray(idx.valid).reshape(nb, bs)
+    seen = np.concatenate([row_ids[b][valid[b]] for b in range(nb)])
+    # every original row appears exactly once across all leaf buckets
+    np.testing.assert_array_equal(np.sort(seen), np.arange(n))
+    # leaf slots beyond the block count are structurally invalid
+    node_valid = np.asarray(tree.node_valid)
+    assert not node_valid[nl + nb:].any()
+    # and a leaf is valid iff its block holds at least one real row
+    np.testing.assert_array_equal(node_valid[nl:nl + nb], valid.any(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# invariant (b): node bounds dominate every descendant similarity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(20, 400), st.integers(2, 16), st.integers(0, 1000))
+def test_node_bounds_dominate_descendants(n, d, seed):
+    rng = np.random.default_rng(seed)
+    db = clustered(rng, n, d) if seed % 2 else \
+        rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(3, d)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=min(4, n), block_size=32)
+    tree = build_tree(idx)
+    nb, bs, nl = idx.n_blocks, idx.block_size, tree.n_leaf_slots
+    qn, qp = prep_queries(idx, jnp.asarray(q))
+    # per-node Eq. 13 interval bound, same formula the descent evaluates
+    from repro.kernels.ref import block_bounds
+    ub = np.asarray(block_bounds(qp, tree.node_lo, tree.node_hi))  # [m, 2nl]
+    node_valid = np.asarray(tree.node_valid)
+    # true max similarity per leaf, then fold bottom-up: a node's true max
+    # is the max over its children — exactly the subtree's best candidate
+    sims = np.asarray(qn @ idx.db.T)                               # [m, n_pad]
+    sims = np.where(np.asarray(idx.valid)[None, :], sims, -np.inf)
+    best = np.full((sims.shape[0], 2 * nl), -np.inf)
+    best[:, nl:nl + nb] = sims.reshape(-1, nb, bs).max(axis=2)
+    sz = nl // 2
+    while sz >= 1:
+        best[:, sz:2 * sz] = best[:, 2 * sz:4 * sz].reshape(
+            -1, sz, 2).max(axis=2)
+        sz //= 2
+    mask = node_valid[None, 1:] & np.isfinite(best[:, 1:])
+    assert (ub[:, 1:][mask] + 1e-5 >= best[:, 1:][mask]).all(), (
+        "an internal node's transitive Eq. 13 bound fell below a "
+        "descendant's true similarity")
+
+
+# ---------------------------------------------------------------------------
+# invariant (c): tree top-k equals brute-force top-k
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(30, 500), st.integers(2, 24), st.integers(1, 12),
+       st.integers(0, 1000))
+def test_tree_topk_matches_brute_property(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:
+        db = rng.normal(size=(n, d)).astype(np.float32)
+    elif kind == 1:
+        db = clustered(rng, n, d)
+    else:
+        db = _adversarial(rng, n, d)
+    q = rng.normal(size=(4, d)).astype(np.float32)
+    k = min(k, n)
+    idx = build_index(jnp.asarray(db), n_pivots=min(4, n), block_size=32)
+    sref, iref = ref.brute_force_knn(q, db, k)
+    eng = SearchEngine(idx, backend="tree", bm=8)
+    s, i, _ = eng.search(jnp.asarray(q), k)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=5e-5,
+                               err_msg=f"n={n} d={d} k={k} seed={seed}")
+
+
+@pytest.mark.parametrize("leaf_eval", ["scan", "kernel"])
+@pytest.mark.parametrize("warm_start,best_first",
+                         [(True, True), (False, False), (True, False)])
+def test_tree_matches_brute_clustered(leaf_eval, warm_start, best_first, rng):
+    db = clustered(rng, 3000, 32)
+    q = db[::250] + 0.01 * rng.normal(size=(12, 32)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+    eng = SearchEngine(idx, backend="tree", leaf_eval=leaf_eval,
+                       warm_start=warm_start, best_first=best_first, bm=8)
+    s, i, stats = eng.search(jnp.asarray(q), 10)
+    sref, iref = ref.brute_force_knn(q, db, 10)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    assert _sets_equal(i, iref) > 0.98
+    assert stats.backend == "tree"
+
+
+def test_tree_matches_brute_adversarial(rng):
+    """Duplicate-heavy clusters: ties and near-ties everywhere the seed,
+    descent, and leaf merge could lose a candidate."""
+    db = _adversarial(rng, 2400, 24)
+    q = db[::200] + 0.005 * rng.normal(size=(12, 24)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+    sref, iref = ref.brute_force_knn(q, db, 8)
+    for leaf_eval in ("scan", "kernel"):
+        eng = SearchEngine(idx, backend="tree", leaf_eval=leaf_eval, bm=8)
+        s, i, _ = eng.search(jnp.asarray(q), 8)
+        np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5,
+                                   err_msg=leaf_eval)
+        assert _sets_equal(i, iref) > 0.97, leaf_eval
+
+
+# ---------------------------------------------------------------------------
+# pruning power and stats surface
+# ---------------------------------------------------------------------------
+
+def test_tree_prunes_at_least_scan(rng):
+    """Acceptance: on clustered data the tree backend's block_prune_frac is
+    >= the scan backend's at equal k (its τ seed is the max of the beam
+    and flat prescans, so its pruned set is a superset)."""
+    db = clustered(rng, 4096, 32, n_centers=8, noise=0.04)
+    q = db[rng.choice(4096, 32, replace=False)]
+    q = jnp.asarray(q + 0.02 * rng.normal(size=q.shape).astype(np.float32))
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
+    scan = SearchEngine(idx, backend="scan")
+    tree = SearchEngine(idx, backend="tree", leaf_eval="scan")
+    _, _, st_s = scan.search(q, 10)
+    _, _, st_t = tree.search(q, 10)
+    assert float(st_t.block_prune_frac) >= float(st_s.block_prune_frac) - 1e-6
+    assert float(st_t.tree_prune_frac) > 0.3, "descent must cut subtrees"
+    # transitive saving: the descent evaluated well under one bound per
+    # (query, node) — the thing a flat scan cannot do
+    assert float(st_t.extras["tree_node_eval_frac"]) < 0.9
+
+
+def test_tree_stats_fields(rng):
+    db = clustered(rng, 1024, 16)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=32)
+    eng = SearchEngine(idx, backend="tree")
+    _, _, stats = eng.search(jnp.asarray(db[:4]), 5, element_stats=True)
+    assert stats.backend == "tree"
+    assert 0.0 <= float(stats.tree_prune_frac) <= 1.0
+    assert 0.0 <= float(stats.block_prune_frac) <= 1.0
+    assert 0.0 <= float(stats.elem_prune_frac) <= 1.0
+    assert 0.0 < float(stats.extras["tree_node_eval_frac"]) <= 1.0
+    assert stats.extras["tree_levels"] >= 1
+    # dict-style access keeps working for the new field
+    assert stats["tree_prune_frac"] == stats.tree_prune_frac
+    # non-tree backends report None, not 0
+    _, _, st_scan = SearchEngine(idx, backend="scan").search(
+        jnp.asarray(db[:4]), 5)
+    assert st_scan.tree_prune_frac is None
+
+
+def test_tree_warm_start_seed_is_lower_bound(rng):
+    """The beam-descent τ seed is a true lower bound on each query's final
+    k-th best similarity (the exactness keystone of DESIGN.md §3.5)."""
+    db = clustered(rng, 1024, 16)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=32)
+    tree = build_tree(idx)
+    qn, qp = prep_queries(idx, jnp.asarray(db[:6]))
+    for k, width in [(3, 1), (10, 2), (40, 4), (70, 3)]:
+        tau = np.asarray(tree_warm_start(tree, qn, qp, k, width))
+        sref, _ = ref.brute_force_knn(db[:6], db, k)
+        assert (tau <= sref[:, -1] + 1e-6).all(), (k, width)
+
+
+def test_tree_descent_keeps_all_true_neighbors(rng):
+    """No leaf holding a true top-k member is ever cut by the descent."""
+    db = clustered(rng, 2048, 24)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=64)
+    tree = build_tree(idx)
+    q = db[::256] + 0.01 * rng.normal(size=(8, 24)).astype(np.float32)
+    qn, qp = prep_queries(idx, jnp.asarray(q))
+    k = 10
+    tau0 = tree_warm_start(tree, qn, qp, k, 2)
+    leaf_alive, _, _ = tree_descend(tree, qp, tau0)
+    alive = np.asarray(leaf_alive)
+    _, iref = ref.brute_force_knn(q, db, k)
+    # original row id -> padded position -> block
+    row_ids = np.asarray(idx.row_ids)
+    pos_of = np.full(row_ids.max() + 1, -1)
+    pos_of[row_ids[row_ids >= 0]] = np.nonzero(row_ids >= 0)[0]
+    blocks = pos_of[iref] // idx.block_size                    # [m, k]
+    for qi in range(len(q)):
+        assert alive[qi, blocks[qi]].all(), f"query {qi} lost a neighbor"
+
+
+def test_tree_k_exceeds_valid_rows(rng):
+    db = rng.normal(size=(40, 8)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=16)
+    for leaf_eval in ("scan", "kernel"):   # kernel falls back (k > block)
+        eng = SearchEngine(idx, backend="tree", leaf_eval=leaf_eval)
+        s, i, _ = eng.search(jnp.asarray(db[:2]), 40)
+        sref, _ = ref.brute_force_knn(db[:2], db, 40)
+        np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5,
+                                   err_msg=leaf_eval)
+
+
+def test_build_tree_rejects_sharded_index(rng):
+    import jax
+    db = rng.normal(size=(128, 8)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x]), idx)
+    with pytest.raises(ValueError, match="single-shard"):
+        build_tree(stacked)

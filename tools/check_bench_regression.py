@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Fail CI when pruning power regresses against the committed baseline.
+
+Compares a fresh ``benchmarks/pruning_power.py --json`` output against the
+checked-in ``BENCH_pruning.json``:
+
+* **exactness gates** (metric names ending in ``_matches_brute``) must be
+  exactly 1.0 in the current run — any other value is a hard failure
+  regardless of tolerance (a search path stopped returning the brute-force
+  result set);
+* every other metric is **tolerance-banded in its bad direction only**:
+  prune/prunable fractions may not drop by more than ``--tolerance``,
+  exact-computed fractions (``*_exact_frac``, ``*_computed_frac``, lower =
+  better) may not rise by more than it.  Improvements never fail — they
+  are printed as notices suggesting a re-baseline;
+* a baseline metric missing from the current run fails (a benchmark row
+  was silently dropped); new current-only metrics are informational;
+* the two files must have been produced with the same ``--quick`` flag —
+  quick and full runs use different corpora and are not comparable.
+
+Exit code 1 with one line per violation.
+
+Usage:
+  python tools/check_bench_regression.py --current out.json \\
+      [--baseline BENCH_pruning.json] [--tolerance 0.05]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: substrings marking "lower = better" metrics (fractions of work done)
+LOWER_BETTER = ("exact_frac", "computed_frac", "node_eval_frac")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("benchmark") != "pruning_power":
+        sys.exit(f"{path}: not a pruning_power payload")
+    return payload
+
+
+def compare(baseline: dict, current: dict, tolerance: float):
+    errors, notices = [], []
+    if bool(baseline.get("quick")) != bool(current.get("quick")):
+        errors.append(
+            f"quick-mode mismatch: baseline quick={baseline.get('quick')} "
+            f"vs current quick={current.get('quick')} — runs are not "
+            f"comparable")
+        return errors, notices
+    base = {m["name"]: m["value"] for m in baseline["metrics"]}
+    cur = {m["name"]: m["value"] for m in current["metrics"]}
+
+    for name, bval in base.items():
+        if name not in cur:
+            errors.append(f"{name}: present in baseline but missing from "
+                          f"the current run (benchmark row dropped?)")
+            continue
+        cval = cur[name]
+        if name.endswith("_matches_brute"):
+            if cval != 1.0:
+                errors.append(f"{name}: EXACTNESS MISMATCH — current "
+                              f"{cval} != 1.0 (result set no longer equals "
+                              f"brute force); hard failure")
+            continue
+        lower_better = any(tag in name for tag in LOWER_BETTER)
+        delta = cval - bval
+        worse = delta > tolerance if lower_better else -delta > tolerance
+        better = -delta > tolerance if lower_better else delta > tolerance
+        if worse:
+            direction = "rose" if lower_better else "dropped"
+            errors.append(f"{name}: {direction} {bval:.4f} -> {cval:.4f} "
+                          f"(|Δ|={abs(delta):.4f} > tolerance {tolerance})")
+        elif better:
+            notices.append(f"{name}: improved {bval:.4f} -> {cval:.4f} — "
+                           f"consider re-baselining BENCH_pruning.json")
+
+    for name in sorted(set(cur) - set(base)):
+        notices.append(f"{name}: new metric (value {cur[name]}), not in "
+                       f"baseline — will be gated once baselined")
+    return errors, notices
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate pruning_power output against the committed "
+                    "baseline")
+    ap.add_argument("--current", required=True,
+                    help="fresh pruning_power.py --json output")
+    ap.add_argument("--baseline", default="BENCH_pruning.json",
+                    help="committed baseline (default: BENCH_pruning.json)")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="allowed one-sided drift for prune/computed "
+                         "fractions (default: 0.05)")
+    args = ap.parse_args(argv)
+
+    errors, notices = compare(_load(args.baseline), _load(args.current),
+                              args.tolerance)
+    for n in notices:
+        print(f"note: {n}")
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    if errors:
+        print(f"\n{len(errors)} regression(s) vs {args.baseline}",
+              file=sys.stderr)
+        return 1
+    print(f"bench gate ok: {args.baseline} vs {args.current} "
+          f"(tolerance {args.tolerance})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Exercise the ``sharded`` SearchEngine backend on the current device set.
+
+Meant for the CI multi-device job, which sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so a hosted runner
+presents eight virtual CPU devices: builds a mesh over ALL visible
+devices, shards a clustered datastore across it, and checks the sharded
+engine (τ warm-start + best-first applied per shard, element stats on)
+against fp64 brute force.  Exits non-zero on any mismatch.
+
+Run locally:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \\
+      PYTHONPATH=src python tools/sharded_smoke.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")   # never stall on TPU probing
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def main() -> int:
+    from repro.core import ref
+    from repro.search import SearchEngine
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        print(f"sharded smoke needs >= 2 devices, found {n_dev}; set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=8",
+              file=sys.stderr)
+        return 2
+
+    rng = np.random.default_rng(11)
+    c = ref.normalize(rng.normal(size=(6, 24)))
+    db = ref.normalize(c[rng.integers(0, 6, 4099)]
+                       + 0.05 * rng.normal(size=(4099, 24))).astype(np.float32)
+    q = ref.normalize(db[::500] + 0.01 * rng.normal(size=(9, 24))
+                      ).astype(np.float32)
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    eng = SearchEngine.build(db, n_pivots=8, block_size=64, mesh=mesh)
+    assert eng.backend_name == "sharded", eng.backend_name
+    sims, ids, stats = eng.search(jnp.asarray(q), 7, element_stats=True)
+
+    sref, iref = ref.brute_force_knn(q, db, 7)
+    np.testing.assert_allclose(np.asarray(sims), sref, atol=2e-5)
+    set_match = (np.sort(np.asarray(ids), 1) == np.sort(iref, 1)).mean()
+    assert set_match > 0.98, f"id set match {set_match}"
+    blk = float(stats.block_prune_frac)
+    elem = float(stats.elem_prune_frac)
+    assert 0.0 <= blk <= 1.0 and 0.0 <= elem <= 1.0, (blk, elem)
+    print(f"sharded smoke ok: {n_dev} devices, block_prune_frac={blk:.3f}, "
+          f"elem_prune_frac={elem:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
