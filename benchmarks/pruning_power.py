@@ -10,7 +10,11 @@ Four structures x two bound families, on three data regimes:
     baseline vs τ warm-start + best-first block ordering,
   * the array-encoded pivot tree (``backend="tree"``, DESIGN.md §3.5):
     transitive Eq. 13 descent over block subtrees — the TPU-shaped
-    answer to the VP-tree, measured on the same regimes.
+    answer to the VP-tree, measured on the same regimes,
+  * the sharded datastore (``backend="sharded"``) over a mesh of every
+    visible device (one on the CI bench runner, eight in the multidevice
+    job): flat per-shard scan vs the per-shard tree descent with the
+    broadcast global τ (``tree_shards=True``, DESIGN.md §3.6).
 
 ``*_matches_brute`` rows are exactness gates (1.0 = identical result set
 to float64 brute force); ``tools/check_bench_regression.py`` hard-fails
@@ -29,6 +33,7 @@ from __future__ import annotations
 import argparse
 import json
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -119,7 +124,7 @@ def run(k: int = 10, n_queries: int = 32, *, quick: bool = False):
                      st_t.block_prune_frac,
                      "tree total (descent + leaf stage); >= scan engine"))
         rows.append((f"pruning/{regime}/tree_node_eval_frac",
-                     st_t.extras["tree_node_eval_frac"],
+                     st_t.tree_node_eval_frac,
                      "bound evals the descent needed (lower = better)"))
         rows.append((f"pruning/{regime}/tree_matches_brute",
                      _matches_brute(s_tree, db, q, k),
@@ -134,6 +139,41 @@ def run(k: int = 10, n_queries: int = 32, *, quick: bool = False):
                      "Pallas leaf-gather stage, over the full grid"))
         rows.append((f"pruning/{regime}/tree_kernel_matches_brute",
                      _matches_brute(s_trk, db, q, k),
+                     "exactness gate: must be 1.0"))
+
+        # sharded datastore over every visible device: flat per-shard scan
+        # vs the per-shard tree descent with the broadcast global tau, on
+        # the SAME placed index.  The per-shard trees must prune at least
+        # what the flat path does (DESIGN.md §3.6) — the tree_prune_frac >=
+        # sharded block_prune_frac ordering is part of what the regression
+        # gate watches.
+        from repro.core.distributed import (build_sharded_index,
+                                            place_sharded_index)
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        sidx = place_sharded_index(
+            build_sharded_index(db, mesh.devices.size, n_pivots=16,
+                                block_size=64), mesh)
+        shf = SearchEngine(sidx, mesh=mesh, tree_shards=False)
+        s_shf, _, st_sf = shf.search(qj, k)
+        rows.append((f"pruning/{regime}/sharded_block_prune_frac",
+                     st_sf.block_prune_frac,
+                     "sharded, flat per-shard scan"))
+        rows.append((f"pruning/{regime}/sharded_matches_brute",
+                     _matches_brute(s_shf, db, q, k),
+                     "exactness gate: must be 1.0"))
+        sht = SearchEngine(sidx, mesh=mesh, tree_shards=True)
+        s_sht, _, st_st = sht.search(qj, k)
+        rows.append((f"pruning/{regime}/sharded_tree_prune_frac",
+                     st_st.tree_prune_frac,
+                     "per-shard transitive descent alone (global tau)"))
+        rows.append((f"pruning/{regime}/sharded_tree_block_prune_frac",
+                     st_st.block_prune_frac,
+                     "sharded tree total; >= flat sharded"))
+        rows.append((f"pruning/{regime}/sharded_tree_node_eval_frac",
+                     st_st.tree_node_eval_frac,
+                     "bound evals the per-shard descents needed"))
+        rows.append((f"pruning/{regime}/sharded_tree_matches_brute",
+                     _matches_brute(s_sht, db, q, k),
                      "exactness gate: must be 1.0"))
 
         kern0 = SearchEngine(idx, backend="kernel", bm=8, warm_start=False,

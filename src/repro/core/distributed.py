@@ -15,6 +15,14 @@ bytes, negligible next to the avoided score matmuls — then ``lax.top_k``.
 Exactness is preserved: every shard returns its true local top-k and the
 union of local top-k sets contains the global top-k.
 
+With per-shard pivot trees (``SearchEngine(tree_shards=...)``) the local
+scan is preceded by the transitive Eq. 13 descent over each shard's own
+tree, pruning against a **global** τ assembled from every shard's
+warm-start candidates by a second tiny collective (mask-carrying top-k
+merge, ``O(devices * k)``) — DESIGN.md §3.6.  The merge argument weakens
+from "every shard returns its local top-k" to "every dropped candidate is
+provably below the global k-th best", which is still exact.
+
 At 1000+ nodes this is the standard sharded-retrieval pattern (one shard per
 chip, single small collective per query batch); the same code runs on any
 mesh because only the flattened axis names are referenced.
@@ -75,10 +83,12 @@ def build_sharded_index(
 
 
 def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names,
-                         *, warm_start: bool = False, best_first: bool = False,
+                         *, prune: bool = True,
+                         warm_start: bool = False, best_first: bool = False,
                          warm_start_blocks: int | None = None,
                          element_stats: bool = False,
-                         with_stats: bool = False):
+                         with_stats: bool = False,
+                         tree=None, margin: float = 4e-7):
     """Body that runs inside ``shard_map``: local scan + global merge.
 
     ``index`` arrives with the leading shard axis of size 1 (this device's
@@ -86,60 +96,123 @@ def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names,
     ``warm_start_blocks`` / ``element_stats`` are the engine policies,
     applied to each shard's local scan (the τ prescan seeds from each
     shard's own best-bound blocks — DESIGN.md §3.4).
+
+    With ``tree`` (a :class:`~repro.search.tree.ShardTreeArrays`, leading
+    shard axis of size 1) each shard instead runs the transitive Eq. 13
+    descent over its *local* pivot tree before the leaf scan — DESIGN.md
+    §3.6.  The τ the descent prunes against is **global**: every shard's
+    beam warm-start candidates are merged with the mask-carrying top-k
+    all-gather and the k-th best of the union is broadcast back, so each
+    shard's pruning threshold is at least the flat path's local seed
+    (per-shard pruning is a superset of the flat per-shard pruning) while
+    remaining a true lower bound on the global k-th best (cut subtrees
+    provably hold no global top-k member, so the merge stays exact).
+    Everything stays statically shaped — the surviving leaves are a
+    boolean mask into the local scan, not a compaction — which is what
+    ``shard_map`` tracing requires.
     """
-    from repro.dist.collectives import topk_allgather_merge
+    from repro.dist.collectives import global_tau_merge, topk_allgather_merge
     from repro.search.backends import map_row_ids, prep_queries, scan_search
     local = jax.tree.map(lambda x: x[0], index)
     qn, qp = prep_queries(local, queries)
-    sims, pos, blk_pruned, elem_pruned = scan_search(
-        local, qn, qp, k, warm_start=warm_start, best_first=best_first,
-        warm_start_blocks=warm_start_blocks, element_stats=element_stats)
+    m = qn.shape[0]
+    if tree is None:
+        sims, pos, blk_pruned, elem_pruned = scan_search(
+            local, qn, qp, k, prune=prune, margin=margin,
+            warm_start=warm_start, best_first=best_first,
+            warm_start_blocks=warm_start_blocks, element_stats=element_stats)
+        tree_pruned = evals = None
+    else:
+        # the descent is pure masking work with prune off — the backend
+        # only hands a tree in when pruning is on
+        assert prune, "tree descent requires prune=True"
+        from repro.search.tree import TreeIndex, _seed_and_descend
+        ltree = TreeIndex(local, tree.node_lo[0], tree.node_hi[0],
+                          tree.node_valid[0])
+        # the one exactness-critical seed -> descend -> flat-reseed
+        # sequence, shared with the single-device tree backend; the merge
+        # hook turns each shard's beam candidates into ONE global τ per
+        # query (mask-carrying, so shards holding < k candidates still
+        # contribute theirs) — §3.6
+        tau0, leaf_alive, leaf_ub, evals = _seed_and_descend(
+            ltree, qn, qp, k, warm_start=warm_start,
+            warm_start_blocks=warm_start_blocks, margin=margin,
+            tau_merge=lambda s, v: global_tau_merge(s, v, k, axis_names))
+        sims, pos, blk_pruned, elem_pruned = scan_search(
+            local, qn, qp, k, margin=margin, warm_start=False,
+            best_first=best_first, element_stats=element_stats,
+            tau0=tau0, ub_all=leaf_ub, leaf_mask=leaf_alive)
+        tree_pruned = (~leaf_alive).sum().astype(jnp.float32)
     # build_sharded_index bakes GLOBAL ids into row_ids — no rank arithmetic
     gids = map_row_ids(local.row_ids, pos)
     # tiny collective: O(devices * k) candidates
     merged = topk_allgather_merge(sims, gids, k, axis_names)
     if not with_stats:
         return merged
-    m = qn.shape[0]
-    frac = jax.lax.pmean(blk_pruned / (m * local.n_blocks), axis_names)
-    # element fraction over GLOBAL (query, valid row) pairs: psum of counts
-    # over psum of valid rows, so unevenly-filled shards weight correctly
+    # psum-weighted aggregates: sums of per-shard counts over sums of
+    # per-shard denominators, so unevenly-filled shards weight correctly
+    # (the bug class tests/test_sharded_tree.py pins down)
+    nb_sum = jax.lax.psum(jnp.float32(local.n_blocks), axis_names)
+    frac = jax.lax.psum(blk_pruned, axis_names) / (m * nb_sum)
     n_valid = local.valid.sum().astype(jnp.float32)
     efrac = (jax.lax.psum(elem_pruned, axis_names)
              / jnp.maximum(1.0, m * jax.lax.psum(n_valid, axis_names)))
-    return merged + (frac, efrac)
+    if tree is None:
+        return merged + (frac, efrac)
+    tfrac = jax.lax.psum(tree_pruned, axis_names) / (m * nb_sum)
+    nodes = jax.lax.psum(ltree.node_valid.sum().astype(jnp.float32),
+                         axis_names)
+    evfrac = jax.lax.psum(evals, axis_names) / jnp.maximum(1.0, m * nodes)
+    return merged + (frac, efrac, tfrac, evfrac)
 
 
 def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None,
-                        *, warm_start: bool = False, best_first: bool = False,
+                        *, prune: bool = True,
+                        warm_start: bool = False, best_first: bool = False,
                         warm_start_blocks: int | None = None,
                         element_stats: bool = False,
-                        with_stats: bool = False):
-    """Build a jitted ``(index, queries, k) -> (sims, gids)`` closure.
+                        with_stats: bool = False,
+                        margin: float = 4e-7):
+    """Build a jitted ``(index, queries, k[, tree]) -> (sims, gids)`` closure.
 
     ``axis_names`` defaults to *all* mesh axes — the datastore shards over
     every chip.  Results are fully replicated.  With ``with_stats`` the
-    closure additionally returns the shard-mean block-prune fraction and
-    the global element-prune fraction (0 unless ``element_stats``).
+    closure additionally returns the psum-weighted block-prune fraction
+    and the global element-prune fraction (0 unless ``element_stats``).
+
+    Pass ``tree`` (a shard-stacked
+    :class:`~repro.search.tree.ShardTreeArrays`, placed like the index) to
+    run the per-shard transitive Eq. 13 descent with the broadcast global
+    τ before each shard's leaf scan (DESIGN.md §3.6); with ``with_stats``
+    the closure then also returns the psum-weighted ``tree_prune_frac``
+    and ``tree_node_eval_frac``.
     """
     axis_names = tuple(axis_names or mesh.axis_names)
 
     from repro.dist.compat import shard_map
 
     @functools.partial(jax.jit, static_argnames=("k",))
-    def run(index: BlockIndex, queries: Array, k: int):
+    def run(index: BlockIndex, queries: Array, k: int, tree=None):
+        body = functools.partial(
+            sharded_search_local, k=k, axis_names=axis_names, prune=prune,
+            warm_start=warm_start, best_first=best_first,
+            warm_start_blocks=warm_start_blocks,
+            element_stats=element_stats, with_stats=with_stats,
+            margin=margin)
+        n_stats = (6 if tree is not None else 4) if with_stats else 2
+        idx_specs = jax.tree.map(lambda _: P(axis_names), index)
+        if tree is None:
+            fn = shard_map(
+                body, mesh=mesh, in_specs=(idx_specs, P()),
+                out_specs=(P(),) * n_stats, check_vma=False)
+            return fn(index, queries)
         fn = shard_map(
-            functools.partial(sharded_search_local, k=k, axis_names=axis_names,
-                              warm_start=warm_start, best_first=best_first,
-                              warm_start_blocks=warm_start_blocks,
-                              element_stats=element_stats,
-                              with_stats=with_stats),
+            lambda idx, q, tr: body(idx, q, tree=tr),
             mesh=mesh,
-            in_specs=(jax.tree.map(lambda _: P(axis_names), index), P()),
-            out_specs=(P(), P(), P(), P()) if with_stats else (P(), P()),
-            check_vma=False,
-        )
-        return fn(index, queries)
+            in_specs=(idx_specs, P(), jax.tree.map(lambda _: P(axis_names),
+                                                   tree)),
+            out_specs=(P(),) * n_stats, check_vma=False)
+        return fn(index, queries, tree)
 
     return run
 

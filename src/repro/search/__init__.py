@@ -14,4 +14,5 @@ from repro.search.backends import (available_backends, get_backend,  # noqa: F40
                                    register_backend)
 from repro.search.engine import SearchEngine, auto_backend  # noqa: F401
 from repro.search.stats import SearchStats  # noqa: F401
-from repro.search.tree import TreeIndex, build_tree  # noqa: F401
+from repro.search.tree import (ShardTreeArrays, TreeIndex,  # noqa: F401
+                               build_shard_trees, build_tree)

@@ -464,24 +464,57 @@ class BruteBackend:
 
 @register_backend("sharded")
 class ShardedBackend:
-    """Mesh-sharded scan + all-gather top-k merge (needs ``mesh``)."""
+    """Mesh-sharded scan + all-gather top-k merge (needs ``mesh``).
+
+    With ``SearchEngine(tree_shards=...)`` enabled, each shard first runs
+    the transitive Eq. 13 descent over its own pivot tree (built lazily
+    here, one tree per shard, placed like the index so every device holds
+    only its own) pruning against the broadcast global τ; the surviving
+    leaves feed the same per-shard scan loop — DESIGN.md §3.6.  The
+    descent runs *inside* ``shard_map`` with fully static shapes, so the
+    whole path stays one jitted unit.
+    """
 
     name = "sharded"
+
+    def _shard_tree(self, eng):
+        tree = eng._shard_tree
+        if tree is None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.search.tree import build_shard_trees
+            tree = build_shard_trees(eng.index)
+            axis = tuple(eng.axis_names or eng.mesh.axis_names)
+            sh = NamedSharding(eng.mesh, P(axis))
+            tree = jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+            eng._shard_tree = tree
+        return tree
 
     def run(self, eng, queries, k, *, prune=True, element_stats=False):
         if eng.mesh is None:
             raise ValueError("the 'sharded' backend needs SearchEngine(mesh=...)")
-        fn = eng._sharded_fn.get(element_stats)
+        # the descent is pure masking work with prune off: fall back to the
+        # flat per-shard scan, which honors prune=False like every backend
+        use_tree = eng._tree_shards_enabled and prune
+        key = (element_stats, use_tree, prune)
+        fn = eng._sharded_fn.get(key)
         if fn is None:
             from repro.core.distributed import make_sharded_search
             fn = make_sharded_search(
-                eng.mesh, eng.axis_names, with_stats=True,
+                eng.mesh, eng.axis_names, with_stats=True, prune=prune,
                 warm_start=eng.warm_start, best_first=eng.best_first,
                 warm_start_blocks=eng.warm_start_blocks,
-                element_stats=element_stats)
-            eng._sharded_fn[element_stats] = fn
-        s, ids, frac, efrac = fn(eng.index, jnp.asarray(queries, jnp.float32), k)
-        raw = {"block_prune_frac": frac}
+                element_stats=element_stats, margin=eng.margin)
+            eng._sharded_fn[key] = fn
+        q = jnp.asarray(queries, jnp.float32)
+        if use_tree:
+            s, ids, frac, efrac, tfrac, evfrac = fn(
+                eng.index, q, k, self._shard_tree(eng))
+            raw = {"block_prune_frac": frac, "tree_prune_frac": tfrac,
+                   "tree_node_eval_frac": evfrac}
+        else:
+            s, ids, frac, efrac = fn(eng.index, q, k)
+            raw = {"block_prune_frac": frac}
         if element_stats:
             raw["elem_prune_frac"] = efrac
         return s, ids, raw

@@ -88,6 +88,14 @@ class SearchEngine:
         report ``SearchStats.elem_prune_frac``, the fraction of (query,
         valid row) pairs whose *individual* Eq. 13 bound prunes them
         (backend-uniform; see docs/search-api.md for the glossary).
+      tree_shards: ``sharded`` backend only — run the transitive Eq. 13
+        descent over a per-shard pivot tree (built lazily, one tree per
+        shard over its local pivots) before each shard's leaf scan, with
+        the global warm-start τ broadcast into every shard's descent
+        (DESIGN.md §3.6).  ``True`` / ``False`` force it; ``None``
+        (default) auto-enables once each shard holds ≥ 256 blocks — the
+        same depth at which the single-device tree backend wins.  Ignored
+        by non-sharded backends (the ``tree`` backend always descends).
       margin: fp32 guard added to bounds before comparing with τ.
       leaf_eval: tree-backend leaf stage — ``"scan"`` (portable, traceable
         inside an outer jit), ``"kernel"`` (compact the surviving leaves
@@ -110,6 +118,7 @@ class SearchEngine:
         warm_start_blocks: int | None = None,
         best_first: bool = True,
         element_stats: bool = False,
+        tree_shards: bool | None = None,
         margin: float = 4e-7,
         leaf_eval: str = "auto",
         bm: int = 128,
@@ -133,12 +142,22 @@ class SearchEngine:
         self._sharded_fn = {}
         self._tree_index = None                 # built lazily by TreeBackend
         self._tree_valid_nodes = 0              # cached host count, ditto
+        self._shard_tree = None                 # lazily by ShardedBackend
+        self.tree_shards = tree_shards
+        # dp_min is [nb, P] or [S, nb, P] when shard-stacked; the sharded
+        # tree auto-rule looks at the PER-SHARD depth
+        per_shard_blocks = int(index.dp_min.shape[-2])
+        if index.db.ndim == 3:
+            self._tree_shards_enabled = (
+                per_shard_blocks >= _TREE_MIN_BLOCKS
+                if tree_shards is None else bool(tree_shards))
+        else:
+            self._tree_shards_enabled = False
         self.backend_name = (auto_backend(index, mesh)
                              if backend == "auto" else backend)
         self.backend = _bk.get_backend(self.backend_name)
         self.n_valid = int(np.asarray(index.valid).sum())
-        # dp_min is [nb, P] or [S, nb, P] when shard-stacked
-        self.n_blocks = int(index.dp_min.shape[-2])
+        self.n_blocks = per_shard_blocks
 
     # ------------------------------------------------------------- building
     @classmethod
@@ -200,10 +219,12 @@ class SearchEngine:
             tile_computed_frac=raw.get("tile_computed_frac"),
             elem_prune_frac=raw.get("elem_prune_frac"),
             tree_prune_frac=raw.get("tree_prune_frac"),
+            tree_node_eval_frac=raw.get("tree_node_eval_frac"),
             warm_start=self.warm_start,
             best_first=self.best_first,
             extras={k_: v for k_, v in raw.items()
                     if k_ not in ("block_prune_frac", "tile_computed_frac",
-                                  "elem_prune_frac", "tree_prune_frac")},
+                                  "elem_prune_frac", "tree_prune_frac",
+                                  "tree_node_eval_frac")},
         )
         return sims, ids, stats

@@ -39,14 +39,26 @@ class SearchStats:
     over the same denominator ``n_queries * n_valid_rows`` (sharded: psum
     of counts over psum of valid rows); brute force is 0 by definition.
 
-    ``tree_prune_frac`` (``tree`` backend only) is the fraction of
-    (query, block) pairs excluded by the *transitive* Eq. 13 descent
-    alone — whole subtrees cut at an internal node before any leaf bound
-    was evaluated (DESIGN.md §3.5).  It is a component of
+    ``tree_prune_frac`` (``tree`` backend, and ``sharded`` with per-shard
+    trees) is the fraction of (query, block) pairs excluded by the
+    *transitive* Eq. 13 descent alone — whole subtrees cut at an internal
+    node before any leaf bound was evaluated (DESIGN.md §3.5; sharded:
+    psum-weighted over shards, §3.6).  It is a component of
     ``block_prune_frac`` (descent-pruned blocks are also counted there),
     reported separately so the hierarchy's contribution is visible next
-    to the flat leaf-stage pruning.  ``None`` for non-tree backends.
-    Full glossary: docs/search-api.md.
+    to the flat leaf-stage pruning.
+
+    ``tree_node_eval_frac`` (same backends) is the fraction of (query,
+    valid tree node) pairs whose bound the descent actually had to
+    evaluate — the flat scan is 1.0 at the leaf level by construction,
+    so lower means the hierarchy is paying for itself.
+
+    **Absent-stage fields are ``None``, never 0.**  A stage that did not
+    run (no tree built, element stats off, not the kernel) reports
+    ``None``; ``0.0`` always means the stage ran and pruned/skipped
+    nothing.  Dashboards and regression gates can therefore tell "not
+    run" from "pruned nothing" without knowing the backend.  Full
+    glossary: docs/search-api.md.
     """
 
     backend: str
@@ -57,6 +69,7 @@ class SearchStats:
     tile_computed_frac: float | None = None
     elem_prune_frac: float | None = None
     tree_prune_frac: float | None = None
+    tree_node_eval_frac: float | None = None
     warm_start: bool = False
     best_first: bool = False
     extras: dict = field(default_factory=dict)

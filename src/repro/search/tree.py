@@ -50,7 +50,8 @@ from repro.core.index import BlockIndex, interval_upper_bound
 from repro.kernels import ref as kref
 from repro.search import backends as _bk
 
-__all__ = ["TreeIndex", "build_tree", "tree_warm_start", "tree_descend",
+__all__ = ["TreeIndex", "ShardTreeArrays", "build_tree", "build_shard_trees",
+           "tree_warm_start", "tree_warm_start_topk", "tree_descend",
            "tree_search"]
 
 
@@ -146,6 +147,47 @@ def build_tree(index: BlockIndex) -> TreeIndex:
     return TreeIndex(index, lo, hi, valid)
 
 
+class ShardTreeArrays(NamedTuple):
+    """Per-shard tree node caches for the ``sharded`` backend.
+
+    The same heap layout as :class:`TreeIndex` with a leading shard axis
+    ``[S, ...]`` — one independent tree per shard, built over that shard's
+    *local* pivots and blocks.  Kept separate from :class:`TreeIndex` so
+    the shard_map closure can take ``(index, queries, tree_arrays)``
+    without duplicating the index inside the tree pytree; inside the shard
+    body the two recombine into a local :class:`TreeIndex`.
+    """
+
+    node_lo: Array     # [S, 2*nl, P]
+    node_hi: Array     # [S, 2*nl, P]
+    node_valid: Array  # [S, 2*nl]
+
+
+def build_shard_trees(index: BlockIndex) -> ShardTreeArrays:
+    """Build one pivot tree per shard of a stacked :class:`BlockIndex`.
+
+    ``index`` must carry the leading shard axis produced by
+    ``build_sharded_index`` (all shards share static shapes, so every
+    shard's heap has the same ``nl`` and the result is one stacked array
+    per cache).  Pure ``vmap`` over the per-shard interval caches — place
+    the result with the same ``NamedSharding`` as the index so each device
+    materializes only its own tree (the ``sharded`` backend does this).
+    """
+    if index.db.ndim != 3:
+        raise ValueError("build_shard_trees needs a shard-stacked BlockIndex "
+                         "(leading [S, ...] axis from build_sharded_index); "
+                         "single-shard indexes are served by build_tree")
+    s, n_pad, _ = index.db.shape
+    nb = index.dp_min.shape[1]
+    bs = n_pad // nb
+    block_valid = index.valid.reshape(s, nb, bs).any(axis=2)
+    nl = _next_pow2(nb)
+    lo, hi, valid = jax.vmap(
+        lambda a, b, c: _tree_arrays(a, b, c, nl=nl))(
+            index.dp_min, index.dp_max, block_valid)
+    return ShardTreeArrays(lo, hi, valid)
+
+
 def _gathered_bounds(qp: Array, lo: Array, hi: Array) -> Array:
     """Eq. 13 interval bound for per-query node gathers.
 
@@ -155,9 +197,10 @@ def _gathered_bounds(qp: Array, lo: Array, hi: Array) -> Array:
     return per_pivot.min(axis=-1)
 
 
-def tree_warm_start(tree: TreeIndex, qn: Array, qp: Array, k: int,
-                    width: int) -> Array:
-    """Tree-native τ seeding: beam-descend to ``width`` best-bound leaves.
+def tree_warm_start_topk(tree: TreeIndex, qn: Array, qp: Array, k: int,
+                         width: int):
+    """Beam-descend to ``width`` best-bound leaves; return the candidate
+    top-k, not just its k-th value.
 
     The flat engine's prescan (DESIGN.md §3.4) ranks *all* block bounds to
     pick its candidates; here the candidate leaves are found the way a
@@ -165,22 +208,22 @@ def tree_warm_start(tree: TreeIndex, qn: Array, qp: Array, k: int,
     nodes starts at the root; each level expands to the ``2·width``
     children and keeps the ``width`` highest Eq. 13 interval bounds, so
     only ``2·width·depth`` bounds are evaluated instead of ``n_blocks``.
-    The reached leaves are exact-scored in one batched gather+matmul and
-    the k-th best similarity becomes τ₀.
+    The reached leaves are exact-scored in one batched gather+matmul.
 
-    Exactness does not depend on the beam finding the true best leaves:
-    the k-th best of *any* set of real candidates is a valid lower bound
-    on the final k-th best.  Queries whose reached leaves hold < k valid
-    rows get -inf (no seed), mirroring ``tau_warm_start``.
+    Returns ``(scores [m, k], valid [m, k])``: the k highest exact
+    similarities among the reached real candidates, descending, padded
+    with ``-inf`` / ``valid=False`` when fewer than k real candidates were
+    reached.  Single-device callers reduce this to a τ seed with
+    :func:`tree_warm_start`; the ``sharded`` backend instead all-gathers
+    the per-shard candidate lists and takes the k-th best of the *union*,
+    which is what makes the broadcast τ a valid global bound even when
+    individual shards hold fewer than k candidates (DESIGN.md §3.6).
     """
     idx = tree.index
     m = qp.shape[0]
     nl, depth = tree.n_leaf_slots, tree.n_levels
     nb, bs = idx.n_blocks, idx.block_size
     w = max(1, min(width, nb))
-    if w * bs < k:
-        # fewer candidates than k even over the whole beam: no seed
-        return jnp.full((m,), -jnp.inf, jnp.float32)
     # node id 0 is the empty sentinel (node_valid[0] is False)
     beam = jnp.zeros((m, w), jnp.int32).at[:, 0].set(1)
     for _ in range(depth):
@@ -202,8 +245,32 @@ def tree_warm_start(tree: TreeIndex, qn: Array, qp: Array, k: int,
     vb = (valid_blocks[blocks] & okb[:, :, None]).reshape(m, w * bs)
     scores = jnp.einsum("md,mcd->mc", qn, blk)
     scores = jnp.where(vb, scores, -jnp.inf)
-    tau = jax.lax.top_k(scores, k)[0][:, -1]
-    return jnp.where(jnp.isfinite(tau), tau, -jnp.inf)
+    kk = min(k, w * bs)
+    top_s, sel = jax.lax.top_k(scores, kk)
+    top_v = jnp.take_along_axis(vb, sel, axis=1)
+    if kk < k:                                 # shard smaller than k: pad
+        top_s = jnp.pad(top_s, ((0, 0), (0, k - kk)),
+                        constant_values=-jnp.inf)
+        top_v = jnp.pad(top_v, ((0, 0), (0, k - kk)))
+    return top_s, top_v
+
+
+def tree_warm_start(tree: TreeIndex, qn: Array, qp: Array, k: int,
+                    width: int) -> Array:
+    """Tree-native τ seeding: the k-th best beam candidate, or -inf.
+
+    Exactness does not depend on the beam finding the true best leaves:
+    the k-th best of *any* set of real candidates is a valid lower bound
+    on the final k-th best.  Queries whose reached leaves hold < k valid
+    rows get -inf (no seed), mirroring ``tau_warm_start``.
+    """
+    m = qp.shape[0]
+    w = max(1, min(width, tree.n_blocks))
+    if w * tree.block_size < k:
+        # fewer candidates than k even over the whole beam: no seed
+        return jnp.full((m,), -jnp.inf, jnp.float32)
+    scores, valid = tree_warm_start_topk(tree, qn, qp, k, width)
+    return jnp.where(valid[:, -1], scores[:, -1], -jnp.inf)
 
 
 def tree_descend(tree: TreeIndex, qp: Array, tau0: Array,
@@ -246,9 +313,10 @@ def tree_descend(tree: TreeIndex, qp: Array, tau0: Array,
 
 def _seed_and_descend(tree: TreeIndex, qn: Array, qp: Array, k: int, *,
                       warm_start: bool, warm_start_blocks: int | None,
-                      margin: float):
-    """Beam seed → transitive descent → flat reseed, the one sequence both
-    leaf stages share (exactness-critical; keep it in one place).
+                      margin: float, tau_merge=None):
+    """Beam seed → transitive descent → flat reseed, the one sequence every
+    leaf stage shares (exactness-critical; keep it in one place — the
+    sharded per-shard stage runs it too, see ``core/distributed.py``).
 
     Returns ``(tau0 [m] or None, leaf_alive [m, nb], leaf_ub [m, nb],
     n_evals)``.  The flat reseed is a *second* prescan gather+matmul on
@@ -257,6 +325,15 @@ def _seed_and_descend(tree: TreeIndex, qn: Array, qp: Array, k: int, *,
     guarantees τ₀ ≥ the scan backend's seed, hence the tree's pruned set
     ⊇ the scan's (DESIGN.md §3.5).  It reuses the descent's leaf-level
     bound matrix, so no bounds are re-evaluated.
+
+    ``tau_merge`` turns the beam's candidate list into the descent's τ
+    seed.  Default: the local k-th best (:func:`tree_warm_start`'s
+    semantics).  The sharded backend passes the mask-carrying all-gather
+    reduction instead, so the seed becomes the k-th best of the union of
+    every shard's candidates — the broadcast global τ of DESIGN.md §3.6
+    (any k-th-best-of-real-candidates is a valid lower bound, so the
+    exactness argument is unchanged; the flat reseed below then only ever
+    raises it further).
     """
     idx = tree.index
     m = qn.shape[0]
@@ -264,7 +341,11 @@ def _seed_and_descend(tree: TreeIndex, qn: Array, qp: Array, k: int, *,
     tau0 = jnp.full((m,), -jnp.inf, jnp.float32)
     n_pre = _bk.prescan_blocks(k, bs, nb, warm_start_blocks)
     if warm_start:
-        tau0 = tree_warm_start(tree, qn, qp, k, n_pre)
+        if tau_merge is None:
+            tau0 = tree_warm_start(tree, qn, qp, k, n_pre)
+        else:
+            cand_s, cand_v = tree_warm_start_topk(tree, qn, qp, k, n_pre)
+            tau0 = tau_merge(cand_s, cand_v)
     leaf_alive, leaf_ub, evals = tree_descend(tree, qp, tau0, margin)
     if warm_start:
         tau_flat = _bk.tau_warm_start(
@@ -376,10 +457,14 @@ class TreeBackend:
         ids = _bk.map_row_ids(eng.index.row_ids, pos)
         raw = {
             "block_prune_frac": blk_pruned / (m * nb),
-            "tree_prune_frac": tree_pruned / (m * nb),
-            "tree_node_eval_frac": evals / (m * max(1, eng._tree_valid_nodes)),
             "tree_levels": tree.n_levels,
         }
+        if prune:
+            # absent-stage contract: with prune off the descent never ran,
+            # so the tree fracs stay None (engine raw.get), never 0.0
+            raw["tree_prune_frac"] = tree_pruned / (m * nb)
+            raw["tree_node_eval_frac"] = evals / (
+                m * max(1, eng._tree_valid_nodes))
         if element_stats:
             raw["elem_prune_frac"] = elem_pruned / (m * max(1, eng.n_valid))
         return top_s, ids, raw

@@ -3,6 +3,7 @@ auto-selection, stats shape, and the pruning wins of warm-start/best-first."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import ref
 from repro.core.index import build_index
@@ -46,36 +47,88 @@ def test_backends_match_brute_random(backend, warm_start, best_first, rng):
     assert isinstance(stats, SearchStats) and stats.backend == backend
 
 
-@pytest.mark.parametrize("backend", LOCAL_BACKENDS)
-def test_backends_match_brute_clustered(backend, rng):
-    db = clustered(rng, 3000, 32)
-    q = db[::250] + 0.01 * rng.normal(size=(12, 32)).astype(np.float32)
-    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=64)
-    eng = SearchEngine(idx, backend=backend, bm=8)
-    s, i, _ = eng.search(jnp.asarray(q), 10)
-    sref, iref = ref.brute_force_knn(q, db, 10)
-    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
-    assert _sets_equal(i, iref) > 0.98
+def _adversarial(rng, n, d):
+    """Tight duplicate-heavy clusters plus a thin uniform background: ties
+    and near-ties everywhere a wrong bound, a stale τ seed, or a lossy
+    merge would actually change the result set."""
+    n_dup = n // 3
+    base = clustered(rng, n - n_dup, d, n_centers=4, noise=0.01)
+    dup = base[rng.integers(0, len(base), n_dup)] + 1e-4 * rng.normal(
+        size=(n_dup, d)).astype(np.float32)
+    x = np.concatenate([base, dup])
+    return (x / np.linalg.norm(x, axis=1, keepdims=True)).astype(np.float32)
 
 
-def test_exactness_property_sweep():
-    """Property sweep over (n, d, k, seed): every backend = brute sets."""
-    for seed in range(8):
-        rng = np.random.default_rng(seed)
-        n = int(rng.integers(50, 600))
-        d = int(rng.integers(4, 32))
-        k = int(rng.integers(1, min(9, n)))
-        db = clustered(rng, n, d) if seed % 2 else \
-            rng.normal(size=(n, d)).astype(np.float32)
-        q = rng.normal(size=(5, d)).astype(np.float32)
-        idx = build_index(jnp.asarray(db), n_pivots=min(4, n), block_size=32)
-        sref, iref = ref.brute_force_knn(q, db, k)
-        for backend in LOCAL_BACKENDS:
-            eng = SearchEngine(idx, backend=backend, bm=8)
-            s, i, _ = eng.search(jnp.asarray(q), k)
-            np.testing.assert_allclose(
-                np.asarray(s), sref, atol=5e-5,
-                err_msg=f"{backend} n={n} d={d} k={k} seed={seed}")
+def _fp64_profile(q, db, ids):
+    """Exact fp64 similarity profile of a returned id set, sorted desc.
+
+    Two result sets are equivalent top-k answers iff their profiles are
+    identical — this is tie-safe where raw id comparison is not."""
+    qn = q.astype(np.float64)
+    qn /= np.linalg.norm(qn, axis=1, keepdims=True)
+    dbn = db.astype(np.float64)
+    dbn /= np.linalg.norm(dbn, axis=1, keepdims=True)
+    sims = np.einsum("md,mkd->mk", qn, dbn[np.maximum(np.asarray(ids), 0)])
+    sims = np.where(np.asarray(ids) >= 0, sims, -np.inf)
+    return -np.sort(-sims, axis=1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(60, 400), st.integers(3, 24), st.integers(1, 12),
+       st.integers(0, 10_000))
+def test_cross_backend_equivalence_property(n, d, k, seed):
+    """THE cross-backend contract, one property: the same corpus through
+    scan / kernel / tree / sharded (flat and per-shard tree) / brute
+    returns identical scores and indices (indices compared exactly when
+    the fp64 profile is tie-free, by profile equality otherwise).  This
+    replaces the old per-backend pairwise checks — any backend diverging
+    from any other fails here by transitivity through the fp64 oracle."""
+    import jax
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:
+        db = rng.normal(size=(n, d)).astype(np.float32)
+    elif kind == 1:
+        db = clustered(rng, n, d)
+    else:
+        db = _adversarial(rng, n, d)
+    k = min(k, n)
+    q = rng.normal(size=(4, d)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=min(4, n), block_size=32)
+    sref, iref = ref.brute_force_knn(q, db, k)          # fp64 oracle
+    # a query's id set is uniquely determined iff its profile is tie-free
+    # and strictly separated from the (k+1)-th best
+    if k < n:
+        s_next = ref.brute_force_knn(q, db, k + 1)[0][:, -1]
+        sep = sref[:, -1] > s_next + 1e-9
+    else:
+        sep = np.ones(len(q), bool)
+    tie_free = sep & (np.diff(sref, axis=1) < -1e-9).all(axis=1) \
+        if k > 1 else sep
+
+    mesh = jax.make_mesh((1,), ("data",))
+    from repro.core.distributed import build_sharded_index, place_sharded_index
+    sidx = place_sharded_index(
+        build_sharded_index(db, 1, n_pivots=min(4, n), block_size=32), mesh)
+    runs = {
+        "brute": SearchEngine(idx, backend="brute"),
+        "scan": SearchEngine(idx, backend="scan"),
+        "kernel": SearchEngine(idx, backend="kernel", bm=8),
+        "tree": SearchEngine(idx, backend="tree", bm=8),
+        "sharded": SearchEngine(sidx, mesh=mesh, tree_shards=False),
+        "sharded_tree": SearchEngine(sidx, mesh=mesh, tree_shards=True),
+    }
+    for name, eng in runs.items():
+        s, i, _ = eng.search(jnp.asarray(q), k)
+        msg = f"{name} n={n} d={d} k={k} seed={seed}"
+        np.testing.assert_allclose(np.asarray(s), sref, atol=5e-5,
+                                   err_msg=msg)
+        np.testing.assert_allclose(_fp64_profile(q, db, i), sref,
+                                   rtol=0, atol=1e-12, err_msg=msg)
+        ids = np.sort(np.asarray(i), axis=1)
+        np.testing.assert_array_equal(ids[tie_free],
+                                      np.sort(iref, axis=1)[tie_free],
+                                      err_msg=msg)
 
 
 def test_warm_start_and_best_first_improve_pruning(rng):
@@ -202,6 +255,42 @@ def test_stats_dict_compat(rng):
     assert d["backend"] == "scan" and 0.0 <= d["block_prune_frac"] <= 1.0
     with pytest.raises(KeyError):
         stats["nope"]
+
+
+def test_stats_fraction_invariants(rng):
+    """Every *_prune_frac / *_eval_frac / *_computed_frac is either None
+    (the stage did not run) or a fraction in [0, 1]; a stage that did not
+    run reports None, never a silent 0 — so dashboards can't mistake
+    "not run" for "pruned nothing"."""
+    db = clustered(rng, 1500, 16)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=32)
+    frac_fields = ("block_prune_frac", "tile_computed_frac",
+                   "elem_prune_frac", "tree_prune_frac",
+                   "tree_node_eval_frac")
+    for backend in LOCAL_BACKENDS + ["tree"]:
+        eng = SearchEngine(idx, backend=backend, bm=8)
+        _, _, stats = eng.search(jnp.asarray(db[:5]), 6, element_stats=True)
+        for name in frac_fields:
+            v = getattr(stats, name)
+            assert v is None or 0.0 <= float(v) <= 1.0, (backend, name, v)
+        if backend != "tree":
+            # absent tree stage: None, not 0.0
+            assert stats.tree_prune_frac is None, backend
+            assert stats.tree_node_eval_frac is None, backend
+        else:
+            assert stats.tree_prune_frac is not None
+            assert stats.tree_node_eval_frac is not None
+        if backend != "kernel":
+            assert stats.tile_computed_frac is None, backend
+        # element stats off: None, not 0.0 (brute reports 0.0 when ON —
+        # the stage ran and pruned nothing, by definition)
+        _, _, off = eng.search(jnp.asarray(db[:5]), 6, element_stats=False)
+        assert off.elem_prune_frac is None, backend
+        # prune=False: the descent never runs, so the tree fracs must be
+        # None even on the tree backend — not a silent 0.0
+        _, _, noprune = eng.search(jnp.asarray(db[:5]), 6, prune=False)
+        assert noprune.tree_prune_frac is None, backend
+        assert noprune.tree_node_eval_frac is None, backend
 
 
 def test_engine_build_convenience(rng):

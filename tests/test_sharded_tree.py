@@ -1,0 +1,178 @@
+"""Tree × sharded composition: the per-shard transitive Eq. 13 descent under
+shard_map (DESIGN.md §3.6), promoted from tools/sharded_smoke.py into the
+tier-1 suite.  Runs in subprocesses with 8 virtual CPU devices (the main
+test process must keep exactly one device, see conftest.py)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    # pin the subprocess to the host platform: with a TPU plugin installed
+    # but no TPU attached, backend autodetection stalls for minutes in
+    # GCP-metadata retries before falling back
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+# the shared corpus: clustered (the regime with pruning power), sized so
+# 8 shards are *unevenly* filled (4099 rows -> the last shard is short),
+# with block_size 32 so k=48 exercises k > block size end to end
+_SETUP = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import ref
+    from repro.search import SearchEngine
+    rng = np.random.default_rng(11)
+    c = ref.normalize(rng.normal(size=(6, 24)))
+    db = ref.normalize(c[rng.integers(0, 6, 4099)]
+                       + 0.05 * rng.normal(size=(4099, 24))).astype(np.float32)
+    q = ref.normalize(db[::400] + 0.01 * rng.normal(size=(11, 24))
+                      ).astype(np.float32)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+"""
+
+
+def test_sharded_tree_matches_brute_k_sweep():
+    """sharded + per-shard tree descent returns the brute-force result set
+    for k in {1, 8, 48} (48 > block_size=32: the multi-block prescan, the
+    mask-carrying tau merge, and the all-gather merge all engage)."""
+    _run(_SETUP + """
+    eng = SearchEngine.build(db, n_pivots=8, block_size=32, mesh=mesh,
+                             tree_shards=True)
+    assert eng.backend_name == "sharded", eng.backend_name
+    for k in (1, 8, 48):
+        s, i, stats = eng.search(jnp.asarray(q), k, element_stats=True)
+        sref, iref = ref.brute_force_knn(q, db, k)
+        np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5,
+                                   err_msg=f"k={k}")
+        assert (np.sort(np.asarray(i), 1) == np.sort(iref, 1)).all(), k
+        # the tree stage ran and reported itself
+        assert 0.0 <= float(stats.tree_prune_frac) <= 1.0, k
+        assert 0.0 < float(stats.tree_node_eval_frac) <= 1.0, k
+        assert 0.0 <= float(stats.block_prune_frac) <= 1.0, k
+        assert 0.0 <= float(stats.elem_prune_frac) <= 1.0, k
+    print("ok")
+    """)
+
+
+def test_sharded_tree_prunes_at_least_flat():
+    """The broadcast global tau makes every shard's pruning a superset of
+    the flat per-shard pruning: block_prune_frac(tree) >= flat, and on
+    clustered data the descent alone beats the flat fraction (the
+    acceptance bar BENCH_pruning.json gates)."""
+    _run(_SETUP + """
+    flat = SearchEngine.build(db, n_pivots=8, block_size=32, mesh=mesh,
+                              tree_shards=False)
+    tree = SearchEngine.build(db, n_pivots=8, block_size=32, mesh=mesh,
+                              tree_shards=True)
+    for k in (8, 48):
+        sf, _, stf = flat.search(jnp.asarray(q), k)
+        st, _, stt = tree.search(jnp.asarray(q), k)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(sf), atol=3e-5)
+        assert stf.tree_prune_frac is None and stf.tree_node_eval_frac is None
+        blk_f, blk_t = float(stf.block_prune_frac), float(stt.block_prune_frac)
+        assert blk_t >= blk_f - 1e-6, (k, blk_f, blk_t)
+        assert float(stt.tree_prune_frac) >= blk_f - 1e-6, (
+            k, blk_f, float(stt.tree_prune_frac))
+    print("ok")
+    """)
+
+
+def test_sharded_flat_stats_are_psum_weighted():
+    """The sharded aggregates equal the psum-weighted mean of per-shard
+    stats: sums of per-shard counts over sums of per-shard denominators
+    (uneven last shard included) — the weighting bug class PR 2 fixed by
+    hand for elem_prune_frac, now pinned for every fraction."""
+    _run(_SETUP + """
+    from repro.search.backends import prep_queries, scan_search
+    eng = SearchEngine.build(db, n_pivots=8, block_size=32, mesh=mesh,
+                             tree_shards=False)
+    _, _, stats = eng.search(jnp.asarray(q), 8, element_stats=True)
+    idx = eng.index
+    S = idx.db.shape[0]
+    blk = elem = nbs = nvalid = 0.0
+    for s in range(S):
+        local = jax.tree.map(lambda x: x[s], idx)
+        qn, qp = prep_queries(local, jnp.asarray(q))
+        _, _, bp, ep = scan_search(local, qn, qp, 8, warm_start=True,
+                                   best_first=True, element_stats=True)
+        blk += float(bp); elem += float(ep)
+        nbs += local.n_blocks
+        nvalid += float(np.asarray(local.valid).sum())
+    m = len(q)
+    np.testing.assert_allclose(float(stats.block_prune_frac),
+                               blk / (m * nbs), rtol=1e-6)
+    np.testing.assert_allclose(float(stats.elem_prune_frac),
+                               elem / (m * nvalid), rtol=1e-6)
+    print("ok")
+    """)
+
+
+def test_sharded_tree_stats_are_psum_weighted():
+    """Host re-implementation of the whole sharded tree stage (per-shard
+    beam warm start -> global masked tau merge -> per-shard descent ->
+    flat reseed -> masked leaf scan) reproduces every reported aggregate,
+    proving the shard_map composition computes exactly this."""
+    _run(_SETUP + """
+    from repro.search import build_shard_trees
+    from repro.search.backends import (prep_queries, prescan_blocks,
+                                      scan_search, tau_warm_start)
+    from repro.search.tree import TreeIndex, tree_descend, tree_warm_start_topk
+    k = 8
+    eng = SearchEngine.build(db, n_pivots=8, block_size=32, mesh=mesh,
+                             tree_shards=True)
+    _, _, stats = eng.search(jnp.asarray(q), k, element_stats=True)
+    idx, tr = eng.index, build_shard_trees(eng.index)
+    S, m = idx.db.shape[0], len(q)
+    locals_, prepped, cands = [], [], []
+    for s in range(S):
+        local = jax.tree.map(lambda x: x[s], idx)
+        ltree = TreeIndex(local, tr.node_lo[s], tr.node_hi[s],
+                          tr.node_valid[s])
+        qn, qp = prep_queries(local, jnp.asarray(q))
+        n_pre = prescan_blocks(k, local.block_size, local.n_blocks, None)
+        cands.append(tree_warm_start_topk(ltree, qn, qp, k, n_pre))
+        locals_.append((local, ltree, n_pre)); prepped.append((qn, qp))
+    # host-side mask-carrying merge: k-th best real candidate of the union
+    cs = np.concatenate([np.asarray(c[0]) for c in cands], axis=1)
+    cv = np.concatenate([np.asarray(c[1]) for c in cands], axis=1)
+    cs = np.where(cv, cs, -np.inf)
+    order = np.argsort(-cs, axis=1)
+    kth_s = np.take_along_axis(cs, order, 1)[:, k - 1]
+    kth_v = np.take_along_axis(cv, order, 1)[:, k - 1]
+    tau_g = jnp.asarray(np.where(kth_v, kth_s, -np.inf), jnp.float32)
+    blk = elem = tpruned = evals = nbs = nvalid = nnodes = 0.0
+    for s in range(S):
+        local, ltree, n_pre = locals_[s]
+        qn, qp = prepped[s]
+        nb, bs = local.n_blocks, local.block_size
+        alive, leaf_ub, ev = tree_descend(ltree, qp, tau_g)
+        tau0 = jnp.maximum(tau_g, tau_warm_start(
+            qn, local.db.reshape(nb, bs, -1), local.valid.reshape(nb, bs),
+            leaf_ub, k, n_pre))
+        _, _, bp, ep = scan_search(local, qn, qp, k, warm_start=False,
+                                   best_first=True, element_stats=True,
+                                   tau0=tau0, ub_all=leaf_ub, leaf_mask=alive)
+        blk += float(bp); elem += float(ep)
+        tpruned += float((~np.asarray(alive)).sum()); evals += float(ev)
+        nbs += nb
+        nvalid += float(np.asarray(local.valid).sum())
+        nnodes += float(np.asarray(ltree.node_valid).sum())
+    np.testing.assert_allclose(float(stats.block_prune_frac),
+                               blk / (m * nbs), rtol=1e-6)
+    np.testing.assert_allclose(float(stats.elem_prune_frac),
+                               elem / (m * nvalid), rtol=1e-6)
+    np.testing.assert_allclose(float(stats.tree_prune_frac),
+                               tpruned / (m * nbs), rtol=1e-6)
+    np.testing.assert_allclose(float(stats.tree_node_eval_frac),
+                               evals / (m * nnodes), rtol=1e-6)
+    print("ok")
+    """)

@@ -184,7 +184,7 @@ def test_tree_prunes_at_least_scan(rng):
     assert float(st_t.tree_prune_frac) > 0.3, "descent must cut subtrees"
     # transitive saving: the descent evaluated well under one bound per
     # (query, node) — the thing a flat scan cannot do
-    assert float(st_t.extras["tree_node_eval_frac"]) < 0.9
+    assert float(st_t.tree_node_eval_frac) < 0.9
 
 
 def test_tree_stats_fields(rng):
@@ -196,7 +196,7 @@ def test_tree_stats_fields(rng):
     assert 0.0 <= float(stats.tree_prune_frac) <= 1.0
     assert 0.0 <= float(stats.block_prune_frac) <= 1.0
     assert 0.0 <= float(stats.elem_prune_frac) <= 1.0
-    assert 0.0 < float(stats.extras["tree_node_eval_frac"]) <= 1.0
+    assert 0.0 < float(stats.tree_node_eval_frac) <= 1.0
     assert stats.extras["tree_levels"] >= 1
     # dict-style access keeps working for the new field
     assert stats["tree_prune_frac"] == stats.tree_prune_frac

@@ -33,6 +33,16 @@ import sys
 #: substrings marking "lower = better" metrics (fractions of work done)
 LOWER_BETTER = ("exact_frac", "computed_frac", "node_eval_frac")
 
+#: exactness rows every current run MUST produce, baselined or not — a run
+#: that silently stops emitting one of these has lost a whole search path
+#: (the sharded_tree row is the tree x sharded composition gate)
+REQUIRED_EXACTNESS = (
+    "scan_matches_brute",
+    "tree_matches_brute",
+    "sharded_matches_brute",
+    "sharded_tree_matches_brute",
+)
+
 
 def _load(path: str) -> dict:
     with open(path) as f:
@@ -80,6 +90,18 @@ def compare(baseline: dict, current: dict, tolerance: float):
     for name in sorted(set(cur) - set(base)):
         notices.append(f"{name}: new metric (value {cur[name]}), not in "
                        f"baseline — will be gated once baselined")
+
+    # hard-required exactness rows: their absence from the CURRENT run is a
+    # failure even if they were never baselined (a path stopped running is
+    # as bad as a path going inexact).  Exact match on the metric leaf —
+    # substring matching would let sharded_tree_matches_brute satisfy the
+    # tree_matches_brute requirement
+    leaves = {name.rsplit("/", 1)[-1] for name in cur}
+    for tag in REQUIRED_EXACTNESS:
+        if tag not in leaves:
+            errors.append(f"required exactness row {tag} missing from the "
+                          f"current run — a search path is no longer "
+                          f"exercised by the benchmark")
     return errors, notices
 
 

@@ -6,7 +6,10 @@ Meant for the CI multi-device job, which sets
 presents eight virtual CPU devices: builds a mesh over ALL visible
 devices, shards a clustered datastore across it, and checks the sharded
 engine (τ warm-start + best-first applied per shard, element stats on)
-against fp64 brute force.  Exits non-zero on any mismatch.
+against fp64 brute force — both the flat per-shard scan and the per-shard
+pivot-tree descent (``tree_shards=True``, DESIGN.md §3.6).  Exits
+non-zero on any mismatch.  The pytest twin with deeper assertions is
+tests/test_sharded_tree.py; this script stays as the one-command doctor.
 
 Run locally:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \\
@@ -54,8 +57,27 @@ def main() -> int:
     blk = float(stats.block_prune_frac)
     elem = float(stats.elem_prune_frac)
     assert 0.0 <= blk <= 1.0 and 0.0 <= elem <= 1.0, (blk, elem)
+
+    # tree x sharded composition: per-shard Eq. 13 descent with the
+    # broadcast global tau (DESIGN.md §3.6) — same result set, pruning at
+    # least the flat path's, for k below and above the block size
+    treng = SearchEngine.build(db, n_pivots=8, block_size=64, mesh=mesh,
+                               tree_shards=True)
+    for k in (7, 80):
+        ts, ti, tst = treng.search(jnp.asarray(q), k, element_stats=True)
+        skref, ikref = ref.brute_force_knn(q, db, k)
+        np.testing.assert_allclose(np.asarray(ts), skref, atol=2e-5)
+        tmatch = (np.sort(np.asarray(ti), 1) == np.sort(ikref, 1)).mean()
+        assert tmatch > 0.98, f"tree id set match {tmatch} at k={k}"
+        assert 0.0 <= float(tst.tree_prune_frac) <= 1.0
+        assert 0.0 < float(tst.tree_node_eval_frac) <= 1.0
+    _, _, tst7 = treng.search(jnp.asarray(q), 7)
+    tblk = float(tst7.block_prune_frac)
+    assert tblk >= blk - 1e-6, (tblk, blk)
+
     print(f"sharded smoke ok: {n_dev} devices, block_prune_frac={blk:.3f}, "
-          f"elem_prune_frac={elem:.3f}")
+          f"elem_prune_frac={elem:.3f}, tree block_prune_frac={tblk:.3f}, "
+          f"tree_prune_frac={float(tst7.tree_prune_frac):.3f}")
     return 0
 
 
