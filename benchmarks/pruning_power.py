@@ -32,6 +32,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +64,37 @@ def _datasets(n=3000, d=64, seed=0, regimes=("uniform", "clustered", "dedup")):
             size=(n - n // 2, d)).astype(np.float32)   # near-duplicate regime
         out["dedup"] = dup
     return out
+
+
+def _multiprocess_exactness() -> float:
+    """The multi-host exactness gate row (DESIGN.md §3.7).
+
+    Runs ``tools/multiprocess_smoke.py`` — 2 worker processes with their
+    own ``jax.distributed.initialize`` and virtual CPU devices, building
+    the index process-locally — whose workers assert bit-identity to the
+    single-process sharded backend and brute force.  1.0 iff every worker
+    passed; any crash or mismatch is 0.0, which
+    ``tools/check_bench_regression.py`` hard-fails (the row is in its
+    REQUIRED_EXACTNESS set, so silently dropping it also fails).  Sized
+    small: this row gates exactness across process boundaries, not
+    pruning power.
+    """
+    smoke = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         "tools", "multiprocess_smoke.py")
+    size = ["--rows", "603", "--dim", "16", "--queries", "5",
+            "--block-size", "32", "--pivots", "8"]
+    with tempfile.TemporaryDirectory(prefix="bench_mp_") as tmp:
+        out = os.path.join(tmp, "mp.json")
+        try:
+            r = subprocess.run(
+                [sys.executable, smoke, "--processes", "2", "--devices", "2",
+                 "--json", out] + size, timeout=900)
+            if r.returncode != 0:
+                return 0.0
+            with open(out) as f:
+                return float(json.load(f)["metrics"][0]["value"])
+        except (subprocess.TimeoutExpired, OSError, KeyError, ValueError):
+            return 0.0
 
 
 def _matches_brute(sims, db, q, k) -> float:
@@ -191,6 +226,18 @@ def run(k: int = 10, n_queries: int = 32, *, quick: bool = False):
         rows.append((f"pruning/{regime}/kernel_elem_prune_frac",
                      kt1.elem_prune_frac,
                      "per-element Eq.13 pruning seen by the kernel"))
+
+    # multi-host: one regime-independent exactness gate — the 2-process
+    # smoke whose workers assert bit-identity to the single-process
+    # sharded path (and brute force) after a process-local index build.
+    # Full runs only: quick mode is the per-python-matrix CI smoke, and
+    # the dedicated multiprocess CI job already runs the fleet there
+    # (check_bench_regression requires this row from full runs only).
+    if not quick:
+        rows.append(("pruning/multihost/multiprocess_matches_brute",
+                     _multiprocess_exactness(),
+                     "2-process distributed build; exactness gate: "
+                     "must be 1.0"))
     return rows
 
 

@@ -26,6 +26,20 @@ provably below the global k-th best", which is still exact.
 At 1000+ nodes this is the standard sharded-retrieval pattern (one shard per
 chip, single small collective per query batch); the same code runs on any
 mesh because only the flattened axis names are referenced.
+
+**Multi-host** (DESIGN.md §3.7): :func:`build_sharded_index_local` is the
+process-local variant of the build — each host builds pivots, blocks and
+interval caches over only the shard rows it owns and the global stacked
+index is assembled with ``jax.make_array_from_process_local_data``
+(behind :func:`repro.dist.compat.make_process_local_array`), so no host
+ever materializes the full datastore.  Search needs no multi-host
+changes at all: the per-shard work and the τ / top-k merges already run
+as collectives inside ``shard_map``, which is topology-blind — the same
+jitted program serves one process with eight virtual devices and eight
+hosts with one chip each.  Exactness is likewise unchanged, because
+pivots were *always* shard-local (see §3.7: local pivots only loosen a
+shard's bounds relative to global pivots, and a loose bound can only
+under-prune, never cut a true neighbor).
 """
 from __future__ import annotations
 
@@ -39,8 +53,32 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.index import BlockIndex, build_index
 
-__all__ = ["build_sharded_index", "make_sharded_search", "sharded_search_local",
+__all__ = ["build_sharded_index", "build_sharded_index_local",
+           "local_shard_rows", "make_sharded_search", "sharded_search_local",
            "place_sharded_index"]
+
+
+def _build_shard_part(shard, n_valid: int, row_offset: int, *,
+                      n_pivots: int, block_size: int,
+                      pivot_method: str) -> BlockIndex:
+    """One shard's :class:`BlockIndex` with GLOBAL row ids baked in.
+
+    The one per-shard build both :func:`build_sharded_index` and
+    :func:`build_sharded_index_local` call — keeping it shared is what
+    makes the process-local build bit-identical to the single-controller
+    one (same rows in ⇒ same pivots, reorder, intervals out).
+    """
+    idx = build_index(
+        jnp.asarray(shard), n_pivots=n_pivots, block_size=block_size,
+        pivot_method=pivot_method if n_valid > n_pivots else "random",
+    )
+    # mark padding rows (zero vectors) invalid even when build_index's own
+    # padding did not cover them (row_ids tracks the pre-reorder position),
+    # and bake GLOBAL row ids in, so the merge needs no rank arithmetic
+    # (robust to any device->shard mapping).
+    valid = idx.valid & (idx.row_ids >= 0) & (idx.row_ids < n_valid)
+    gids = jnp.where(valid, idx.row_ids + row_offset, -1).astype(jnp.int32)
+    return idx._replace(valid=valid, row_ids=gids)
 
 
 def build_sharded_index(
@@ -65,21 +103,116 @@ def build_sharded_index(
         db = np.concatenate([db, np.zeros((pad, db.shape[1]), np.float32)], 0)
     parts = []
     for s in range(n_shards):
-        shard = db[s * per : (s + 1) * per]
-        n_valid = min(per, max(0, n - s * per))
-        idx = build_index(
-            jnp.asarray(shard), n_pivots=n_pivots, block_size=block_size,
-            pivot_method=pivot_method if n_valid > n_pivots else "random",
-        )
-        # mark padding rows (zero vectors) invalid even when build_index's own
-        # padding did not cover them (row_ids tracks the pre-reorder position),
-        # and bake GLOBAL row ids in, so the merge needs no rank arithmetic
-        # (robust to any device->shard mapping).
-        valid = idx.valid & (idx.row_ids >= 0) & (idx.row_ids < n_valid)
-        gids = jnp.where(valid, idx.row_ids + s * per, -1).astype(jnp.int32)
-        parts.append(idx._replace(valid=valid, row_ids=gids))
+        parts.append(_build_shard_part(
+            db[s * per : (s + 1) * per],
+            n_valid=min(per, max(0, n - s * per)), row_offset=s * per,
+            n_pivots=n_pivots, block_size=block_size,
+            pivot_method=pivot_method))
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
     return stacked
+
+
+def _flat_axes(mesh: Mesh, axis_names) -> tuple[str, ...]:
+    axis = tuple(axis_names or mesh.axis_names)
+    if jax.process_count() > 1 and set(axis) != set(mesh.axis_names):
+        raise NotImplementedError(
+            "multi-host sharded build supports sharding over ALL mesh axes "
+            f"only (got axis_names={axis!r} on a mesh with axes "
+            f"{mesh.axis_names!r}); replicated shard axes would need "
+            "identical cross-host replicas")
+    return axis
+
+
+def local_shard_rows(n_rows: int, mesh: Mesh, axis_names=None):
+    """Which global datastore rows THIS process's shards cover.
+
+    The sharded datastore places one shard per device of the flattened
+    mesh axes; ownership is read off the placement sharding's own index
+    map (``NamedSharding(mesh, P(axis)).devices_indices_map``), so the
+    shard-id ↔ device assignment is by construction the one
+    ``place_sharded_index`` / ``make_array_from_process_local_data`` use
+    — including permuted ``axis_names`` orders, which flatten differently
+    from ``mesh.devices``.  Returns ``(per, owned)`` where ``per`` is the
+    global rows-per-shard (``ceil(n_rows / n_shards)``) and ``owned`` is
+    this process's shards as ``[(shard_id, row_start, row_stop), ...]``
+    in ascending shard order — the order a process-local datastore slab
+    must be concatenated in for :func:`build_sharded_index_local`.
+    ``row_stop`` is clamped to ``n_rows`` (the trailing shard may be
+    short; its tail pads with invalid rows at build time).
+    """
+    axis = _flat_axes(mesh, axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axis]))
+    imap = NamedSharding(mesh, P(axis)).devices_indices_map((n_shards,))
+    pid = jax.process_index()
+    owned_ids = sorted({(idx[0].start or 0) for d, idx in imap.items()
+                        if d.process_index == pid})
+    per = -(-n_rows // n_shards)
+    owned = [(s, min(s * per, n_rows), min((s + 1) * per, n_rows))
+             for s in owned_ids]
+    return per, owned
+
+
+def build_sharded_index_local(
+    db_local: np.ndarray,
+    mesh: Mesh,
+    *,
+    global_rows: int,
+    axis_names=None,
+    n_pivots: int = 16,
+    block_size: int = 128,
+    pivot_method: str = "maxmin",
+) -> BlockIndex:
+    """Process-local sharded build: assemble the global index from each
+    host's own rows (DESIGN.md §3.7).
+
+    ``db_local`` holds ONLY the rows this process's shards cover — the
+    concatenation, in ascending shard order, of the ``local_shard_rows``
+    ranges (for the usual contiguous ownership that is one slice of the
+    logical datastore).  Every per-shard index (pivots, reorder, interval
+    caches) is built host-side from those rows alone, then the stacked
+    global :class:`BlockIndex` is assembled leaf-by-leaf with
+    ``make_array_from_process_local_data`` — each device materializes
+    exactly its own shard and no host ever holds the full datastore.
+
+    ``global_rows`` is the TOTAL logical row count across all hosts
+    (metadata every launcher knows; it fixes the rows-per-shard split and
+    the global row-id offsets).  The result is placed like
+    :func:`place_sharded_index` would place it — ``P(axis_names)`` over
+    the flattened mesh axes — and is bit-identical, shard for shard, to
+    ``build_sharded_index(full_db, n_shards)`` on the same rows: both
+    call the same per-shard builder.  Search then works unchanged (the
+    merges are collectives inside ``shard_map``); exactness never
+    depended on cross-shard pivot knowledge in the first place.
+    """
+    db_local = np.asarray(db_local, np.float32)
+    axis = _flat_axes(mesh, axis_names)
+    per, owned = local_shard_rows(global_rows, mesh, axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axis]))
+    expected = sum(stop - start for _, start, stop in owned)
+    if db_local.shape[0] != expected:
+        raise ValueError(
+            f"db_local has {db_local.shape[0]} rows but this process's "
+            f"shards {[s for s, _, _ in owned]} cover {expected} of the "
+            f"{global_rows} global rows ({per} per shard across {n_shards} "
+            f"shards); slice the datastore with local_shard_rows()")
+    parts, ofs = [], 0
+    for s, start, stop in owned:
+        cnt = stop - start
+        shard = db_local[ofs:ofs + cnt]
+        ofs += cnt
+        if cnt < per:  # trailing short shard: pad with invalid zero rows
+            shard = np.concatenate(
+                [shard, np.zeros((per - cnt, db_local.shape[1]), np.float32)])
+        parts.append(_build_shard_part(
+            shard, n_valid=cnt, row_offset=s * per, n_pivots=n_pivots,
+            block_size=block_size, pivot_method=pivot_method))
+    from repro.dist.compat import make_process_local_array
+    local = jax.tree.map(
+        lambda *xs: np.stack([np.asarray(x) for x in xs]), *parts)
+    sh = NamedSharding(mesh, P(axis))
+    return jax.tree.map(
+        lambda leaf: make_process_local_array(
+            sh, leaf, (n_shards,) + leaf.shape[1:]), local)
 
 
 def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names,

@@ -385,10 +385,23 @@ def kernel_search(
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def brute_search(index: BlockIndex, qn: Array, k: int):
-    """Full matmul + top-k over the padded database (positions, not ids)."""
+    """Full matmul + top-k over the padded database (positions, not ids).
+
+    ``k`` is clamped to the padded row count — ``lax.top_k`` rejects a k
+    wider than its operand — and the tail pads with ``(-inf, -1)``, the
+    same fill the ``search()`` contract documents for slots beyond the
+    valid rows (and that the scan/tree loops produce naturally).  This
+    matters here more than anywhere: ``auto_backend`` routes exactly the
+    tiny datastores where ``k > n`` is most likely to brute.
+    """
     scores = qn @ index.db.T
     scores = jnp.where(index.valid[None, :], scores, -jnp.inf)
-    sims, pos = jax.lax.top_k(scores, k)
+    kk = min(k, scores.shape[-1])
+    sims, pos = jax.lax.top_k(scores, kk)
+    if kk < k:
+        pad = ((0, 0), (0, k - kk))
+        sims = jnp.pad(sims, pad, constant_values=-jnp.inf)
+        pos = jnp.pad(pos, pad, constant_values=-1)
     return sims, pos.astype(jnp.int32)
 
 
@@ -482,13 +495,36 @@ class ShardedBackend:
         if tree is None:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
-            from repro.search.tree import build_shard_trees
-            tree = build_shard_trees(eng.index)
+            from repro.search.tree import ShardTreeArrays, build_shard_trees
             axis = tuple(eng.axis_names or eng.mesh.axis_names)
             sh = NamedSharding(eng.mesh, P(axis))
-            tree = jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+            # built under jit with explicit out_shardings (not eagerly +
+            # device_put): each device computes only its own shard's tree,
+            # and a multi-host index — whose leaves are not addressable
+            # outside jit — stays legal input
+            build = jax.jit(build_shard_trees,
+                            out_shardings=ShardTreeArrays(sh, sh, sh))
+            tree = build(eng.index)
             eng._shard_tree = tree
         return tree
+
+    def _replicated_queries(self, eng, queries):
+        """Queries as the replicated operand the sharded closure expects.
+
+        Single-process (or under an outer trace) this is a plain
+        ``jnp.asarray``; on a multi-process mesh every host passes the
+        same batch and it becomes one fully-replicated global array —
+        required by ``jit`` when the mesh spans processes.
+        """
+        q = queries
+        if isinstance(q, jax.Array) and not q.is_fully_addressable:
+            return q                      # already a global (multi-host) array
+        if jax.process_count() > 1 and not isinstance(q, jax.core.Tracer):
+            import numpy as _np
+
+            from repro.dist.compat import replicate_to_mesh
+            return replicate_to_mesh(_np.asarray(q, _np.float32), eng.mesh)
+        return jnp.asarray(q, jnp.float32)
 
     def run(self, eng, queries, k, *, prune=True, element_stats=False):
         if eng.mesh is None:
@@ -506,7 +542,7 @@ class ShardedBackend:
                 warm_start_blocks=eng.warm_start_blocks,
                 element_stats=element_stats, margin=eng.margin)
             eng._sharded_fn[key] = fn
-        q = jnp.asarray(queries, jnp.float32)
+        q = self._replicated_queries(eng, queries)
         if use_tree:
             s, ids, frac, efrac, tfrac, evfrac = fn(
                 eng.index, q, k, self._shard_tree(eng))

@@ -21,9 +21,11 @@ brute force (property-tested in tests/test_search_engine.py).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.index import BlockIndex, build_index
@@ -64,6 +66,19 @@ def auto_backend(index: BlockIndex, mesh=None) -> str:
     if index.dp_min.shape[-2] >= _TREE_MIN_BLOCKS:
         return "tree"
     return "scan"
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _pad_topk(sims, ids, *, k: int):
+    """Widen ``[m, kk]`` results to ``[m, k]`` with the ``(-inf, -1)`` fill.
+
+    Jitted (not host numpy) so it composes with tracers when the engine
+    runs inside an outer jit and with multi-host global result arrays,
+    which reject eager host-side ops.
+    """
+    pad = k - sims.shape[1]
+    return (jnp.pad(sims, ((0, 0), (0, pad)), constant_values=-jnp.inf),
+            jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1))
 
 
 class SearchEngine:
@@ -155,9 +170,36 @@ class SearchEngine:
             self._tree_shards_enabled = False
         self.backend_name = (auto_backend(index, mesh)
                              if backend == "auto" else backend)
+        # a flat 2D index cannot serve the sharded backend: without this
+        # check the shard_map body peels a "shard axis" off the real data
+        # and dies mid-trace in an opaque reshape TypeError.  Supplying a
+        # mesh auto-selects "sharded", so this is an easy construction slip.
+        if self.backend_name == "sharded" and index.db.ndim != 3:
+            raise ValueError(
+                "the 'sharded' backend needs a shard-stacked BlockIndex "
+                "(leading [S, ...] shard axis); this index is flat 2D. "
+                "Build one with SearchEngine.build(db, mesh=...) or "
+                "repro.core.distributed.build_sharded_index(...), or drop "
+                "mesh= / pass backend='scan' to search the flat index.")
+        if index.db.ndim == 3 and self.backend_name != "sharded":
+            raise ValueError(
+                f"a shard-stacked BlockIndex is served by the 'sharded' "
+                f"backend only (got backend={self.backend_name!r}); pass "
+                f"mesh= (and backend='auto') to search it.")
         self.backend = _bk.get_backend(self.backend_name)
-        self.n_valid = int(np.asarray(index.valid).sum())
+        # index.valid may be a multi-host global array (distributed build):
+        # not fully addressable, so host-side np.asarray would throw — count
+        # through jit instead (the summed scalar is replicated, int() works).
+        v = index.valid
+        if isinstance(v, jax.Array) and not v.is_fully_addressable:
+            self.n_valid = int(jax.jit(jnp.sum)(v))
+        else:
+            self.n_valid = int(np.asarray(v).sum())
         self.n_blocks = per_shard_blocks
+        #: total padded row slots across all shards — the most candidates
+        #: any search can return; k above this pads with (-inf, -1)
+        self.n_slots = int(index.db.shape[-2]) * (
+            int(index.db.shape[0]) if index.db.ndim == 3 else 1)
 
     # ------------------------------------------------------------- building
     @classmethod
@@ -172,6 +214,8 @@ class SearchEngine:
         seed: int = 0,
         n_shards: int | None = None,
         mesh=None,
+        distributed: bool = False,
+        global_rows: int | None = None,
         **engine_kw: Any,
     ) -> "SearchEngine":
         """Build the index and wrap it in an engine in one call.
@@ -179,7 +223,36 @@ class SearchEngine:
         Pass ``mesh`` (and optionally ``n_shards``, default one shard per
         mesh device) to build a sharded datastore served by the
         ``sharded`` backend.
+
+        ``distributed=True`` (multi-process jax; needs ``mesh``) switches
+        to the process-local build: ``db`` is then only THIS host's slice
+        of the datastore — the rows its shards cover, see
+        :func:`repro.core.distributed.local_shard_rows` — and
+        ``global_rows`` is the total logical row count across all hosts
+        (defaults to ``len(db)`` only when running single-process).  No
+        host materializes the full datastore; search works unchanged
+        (DESIGN.md §3.7).
         """
+        if distributed:
+            if mesh is None:
+                raise ValueError(
+                    "SearchEngine.build(distributed=True) needs mesh= (the "
+                    "global mesh the datastore shards across)")
+            from repro.core.distributed import build_sharded_index_local
+            if global_rows is None:
+                if jax.process_count() > 1:
+                    raise ValueError(
+                        "SearchEngine.build(distributed=True) on a "
+                        "multi-process mesh needs global_rows= (the total "
+                        "datastore rows across all hosts; db holds only "
+                        "this host's slice, so the split cannot be "
+                        "inferred from it)")
+                global_rows = int(np.asarray(db).shape[0])
+            idx = build_sharded_index_local(
+                np.asarray(db), mesh, global_rows=global_rows,
+                axis_names=engine_kw.get("axis_names"), n_pivots=n_pivots,
+                block_size=block_size, pivot_method=pivot_method)
+            return cls(idx, mesh=mesh, **engine_kw)
         if mesh is not None:
             from repro.core.distributed import (build_sharded_index,
                                                 place_sharded_index)
@@ -205,11 +278,20 @@ class SearchEngine:
         identical to brute force for every backend and policy setting.
         ``element_stats`` defaults to the engine-level knob; pass True to
         also get ``SearchStats.elem_prune_frac`` for this call.
+
+        ``k`` may exceed the datastore size: the backends run at
+        ``min(k, n_slots)`` and the tail pads with ``(-inf, -1)`` — the
+        same fill the valid-row contract above already uses, applied
+        uniformly here so no backend's inner ``top_k`` sees a k wider
+        than its score matrix.
         """
         if element_stats is None:
             element_stats = self.element_stats
+        kk = min(k, self.n_slots)
         sims, ids, raw = self.backend.run(
-            self, queries, k, prune=prune, element_stats=element_stats)
+            self, queries, kk, prune=prune, element_stats=element_stats)
+        if kk < k:
+            sims, ids = _pad_topk(sims, ids, k=k)
         stats = SearchStats(
             backend=self.backend_name,
             n_queries=int(queries.shape[0]),

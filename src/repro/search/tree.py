@@ -171,7 +171,11 @@ def build_shard_trees(index: BlockIndex) -> ShardTreeArrays:
     shard's heap has the same ``nl`` and the result is one stacked array
     per cache).  Pure ``vmap`` over the per-shard interval caches — place
     the result with the same ``NamedSharding`` as the index so each device
-    materializes only its own tree (the ``sharded`` backend does this).
+    materializes only its own tree.  The ``sharded`` backend does this by
+    calling the build under ``jit`` with explicit ``out_shardings``, which
+    also makes it legal on a multi-host index (whose leaves are not
+    addressable outside jit) with each host computing only its own
+    shards' trees.
     """
     if index.db.ndim != 3:
         raise ValueError("build_shard_trees needs a shard-stacked BlockIndex "

@@ -1,0 +1,132 @@
+"""Edge-case sweep over ALL backends: k at and beyond the datastore size,
+plus single-query batches — pinning the ``(-inf, -1)``-fill contract that
+``SearchEngine.search`` documents and brute equality on the valid prefix.
+
+Regression context (PR 5): ``brute_search`` used to crash with "top_k must
+be no larger than minor dimension" whenever ``k`` exceeded the padded row
+count — and ``auto_backend`` routes exactly the tiny datastores where
+``k > n`` is most likely to brute.  The engine now clamps every backend's
+inner ``top_k`` to the slot count and pads the tail.  Constructing an
+engine from a flat 2D index plus a mesh used to die mid-trace in an opaque
+reshape TypeError; it now raises at construction.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ref
+from repro.core.index import build_index
+from repro.search import SearchEngine
+
+N_ROWS, DIM, BLOCK = 100, 16, 32        # n_pad = 128: k can straddle both
+BACKENDS = ("scan", "kernel", "brute", "tree", "sharded", "sharded_tree")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(5)
+    db = ref.normalize(rng.normal(size=(N_ROWS, DIM))).astype(np.float32)
+    q = ref.normalize(db[::41] + 0.01 * rng.normal(size=(3, DIM))
+                      ).astype(np.float32)
+    return db, q
+
+
+def make_engine(backend: str, db) -> SearchEngine:
+    if backend in ("sharded", "sharded_tree"):
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        return SearchEngine.build(db, n_pivots=8, block_size=BLOCK,
+                                  mesh=mesh,
+                                  tree_shards=backend == "sharded_tree")
+    # interpret=True pins the kernel path off-TPU; tree always descends
+    return SearchEngine.build(db, n_pivots=8, block_size=BLOCK,
+                              backend=backend, interpret=True)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("k", (N_ROWS, N_ROWS + 10, 130, 200),
+                         ids=("k_eq_nvalid", "k_gt_nvalid", "k_gt_npad",
+                              "k_way_past"))
+def test_k_edge_fill_contract(corpus, backend, k):
+    db, q = corpus
+    eng = make_engine(backend, db)
+    sims, ids, stats = eng.search(jnp.asarray(q), k)
+    sims, ids = np.asarray(sims), np.asarray(ids)
+    assert sims.shape == (len(q), k) and ids.shape == (len(q), k)
+
+    # valid prefix equals fp64 brute force (tie-aware id equality)
+    sref, iref = ref.brute_force_knn(q, db, N_ROWS)
+    np.testing.assert_allclose(sims[:, :N_ROWS], sref, atol=3e-5,
+                               err_msg=f"{backend} k={k}")
+    assert (np.sort(ids[:, :N_ROWS], 1) == np.sort(iref, 1)).all(), (
+        backend, k)
+
+    # every slot past the valid rows carries the (-inf, -1) fill
+    assert (ids[:, N_ROWS:] == -1).all(), (backend, k, ids[:, N_ROWS - 2:])
+    assert np.isneginf(sims[:, N_ROWS:]).all(), (backend, k)
+    # and no -1 leaks into the valid prefix
+    assert (ids[:, :N_ROWS] >= 0).all(), (backend, k)
+    assert stats.k == k
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_single_query_batch(corpus, backend):
+    """m == 1: the degenerate batch every tile/merge path must accept."""
+    db, q = corpus
+    eng = make_engine(backend, db)
+    sims, ids, _ = eng.search(jnp.asarray(q[:1]), 10)
+    sref, iref = ref.brute_force_knn(q[:1], db, 10)
+    np.testing.assert_allclose(np.asarray(sims), sref, atol=3e-5)
+    assert (np.sort(np.asarray(ids), 1) == np.sort(iref, 1)).all()
+
+
+def test_brute_k_beyond_padded_rows_regression(corpus):
+    """The reported crash verbatim: k=130 on a 100-row datastore, routed to
+    brute by auto-selection (pre-PR: ValueError from lax.top_k)."""
+    db, q = corpus
+    eng = SearchEngine.build(db, n_pivots=8, block_size=BLOCK)
+    assert eng.backend_name == "brute"          # tiny datastore -> brute
+    sims, ids, _ = eng.search(jnp.asarray(q), 130)
+    assert np.asarray(sims).shape == (len(q), 130)
+    assert (np.asarray(ids)[:, N_ROWS:] == -1).all()
+
+
+def test_flat_index_plus_mesh_raises_regression(corpus):
+    """Flat 2D BlockIndex + mesh used to auto-select 'sharded' and die in
+    an opaque 'cannot reshape array' TypeError mid-trace; it must raise a
+    clear construction-time error pointing at the sharded build."""
+    db, _ = corpus
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=BLOCK)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    with pytest.raises(ValueError, match="shard-stacked"):
+        SearchEngine(idx, mesh=mesh)
+    # explicit flat backend with a (useless) mesh still works
+    eng = SearchEngine(idx, mesh=mesh, backend="scan")
+    sims, ids, _ = eng.search(jnp.asarray(db[:2]), 3)
+    assert int(np.asarray(ids)[0, 0]) == 0
+
+
+def test_stacked_index_needs_sharded_backend():
+    """The mirror-image construction slip: a shard-stacked index handed to
+    a flat backend raises instead of reshaping garbage."""
+    from repro.core.distributed import build_sharded_index
+    rng = np.random.default_rng(6)
+    db = rng.normal(size=(64, 8)).astype(np.float32)
+    sidx = build_sharded_index(db, 2, n_pivots=4, block_size=16)
+    with pytest.raises(ValueError, match="sharded"):
+        SearchEngine(sidx, backend="scan")
+
+
+def test_stacked_index_without_mesh_raises_at_search():
+    """A shard-stacked index with no mesh constructs (auto -> sharded) but
+    must fail with the clear 'needs mesh' error at search, not an opaque
+    shard_map trace error."""
+    from repro.core.distributed import build_sharded_index
+    rng = np.random.default_rng(7)
+    db = rng.normal(size=(64, 8)).astype(np.float32)
+    sidx = build_sharded_index(db, 2, n_pivots=4, block_size=16)
+    eng = SearchEngine(sidx)
+    assert eng.backend_name == "sharded"
+    with pytest.raises(ValueError, match="mesh"):
+        eng.search(jnp.asarray(db[:2]), 3)

@@ -1,0 +1,132 @@
+"""Multi-host sharded search (DESIGN.md §3.7): the process-local build +
+cross-process τ/top-k merges, driven end to end by tools/multiprocess_smoke.py
+— 2 worker processes (jax.distributed.initialize, gloo CPU collectives) x 2
+virtual devices each, asserted bit-identical to the single-process sharded
+backend and brute force inside the workers.  Kept small here (the CI
+multiprocess job runs the full 2x4 shape); subprocesses because the main
+test process must keep exactly one device (conftest.py)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+SMOKE = os.path.join(REPO, "tools", "multiprocess_smoke.py")
+
+
+def test_multiprocess_smoke_bit_identical():
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)   # the launcher sets per-subprocess counts
+    out = subprocess.run(
+        [sys.executable, SMOKE, "--processes", "2", "--devices", "2",
+         "--rows", "603", "--dim", "16", "--queries", "5",
+         "--block-size", "32", "--pivots", "8"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "multiprocess smoke ok" in out.stdout
+
+
+def test_multiprocess_permuted_axes_ownership():
+    """Permuted axis_names on a 2-axis mesh: P(("y","x")) flattens shards
+    differently from mesh.devices, making each process's owned shard ids
+    NON-contiguous (process 0 owns {0, 2} on a 2x2 mesh).  Ownership is
+    read off the placement sharding's own index map, so the distributed
+    build must still bake correct global row ids — regression for a
+    devices.flat-order assumption that silently scrambled shard contents."""
+    worker = """
+        import sys
+        pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+        sys.path.insert(0, {src!r})
+        from repro.dist.compat import multiprocess_cpu_init
+        multiprocess_cpu_init(f"127.0.0.1:{{port}}", nproc, pid)
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ref
+        from repro.core.distributed import local_shard_rows
+        from repro.search import SearchEngine
+        rng = np.random.default_rng(2)
+        db = ref.normalize(rng.normal(size=(211, 12))).astype(np.float32)
+        mesh = jax.make_mesh((2, 2), ("x", "y"))
+        _, owned = local_shard_rows(211, mesh, axis_names=("y", "x"))
+        if pid == 0:
+            assert [s for s, _, _ in owned] == [0, 2], owned
+        local = np.concatenate([db[a:b] for _, a, b in owned])
+        eng = SearchEngine.build(local, mesh=mesh, distributed=True,
+                                 global_rows=211, axis_names=("y", "x"),
+                                 n_pivots=4, block_size=16)
+        s, i, _ = eng.search(jnp.asarray(db[:3]), 5)
+        sref, iref = ref.brute_force_knn(db[:3], db, 5)
+        assert np.allclose(np.asarray(s), sref, atol=3e-5)
+        assert (np.sort(np.asarray(i), 1) == np.sort(iref, 1)).all()
+        print("ok")
+    """
+    import socket
+    import textwrap
+    src = os.path.abspath(os.path.join(REPO, "src"))
+    code = textwrap.dedent(worker).format(src=src)
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", code, str(i), "2", str(port)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env) for i in range(2)]
+    outs = [p.communicate(timeout=600)[0] for p in procs]
+    for p, out in zip(procs, outs):
+        assert p.returncode == 0, out
+        assert "ok" in out
+
+
+def test_local_shard_rows_covers_datastore():
+    """Single-process: the ownership helper tiles [0, n) exactly once, with
+    the trailing short shard clamped."""
+    import jax
+
+    from repro.core.distributed import local_shard_rows
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    per, owned = local_shard_rows(101, mesh)
+    assert per == -(-101 // jax.device_count())
+    spans = sorted((start, stop) for _, start, stop in owned)
+    assert spans[0][0] == 0 and spans[-1][1] == 101
+    for (_, stop_a), (start_b, _) in zip(spans, spans[1:]):
+        assert stop_a == start_b
+
+
+def test_build_local_matches_single_controller():
+    """Single-process equivalence: build_sharded_index_local on the full
+    rows reproduces build_sharded_index leaf-for-leaf (same per-shard
+    builder), so the multi-host path's shards are bit-identical by
+    construction."""
+    import jax
+
+    from repro.core.distributed import (build_sharded_index,
+                                        build_sharded_index_local,
+                                        place_sharded_index)
+    rng = np.random.default_rng(3)
+    db = rng.normal(size=(203, 12)).astype(np.float32)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    a = place_sharded_index(
+        build_sharded_index(db, mesh.devices.size, n_pivots=4, block_size=16),
+        mesh)
+    b = build_sharded_index_local(db, mesh, global_rows=203, n_pivots=4,
+                                  block_size=16)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_build_local_rejects_wrong_slice():
+    import jax
+
+    from repro.core.distributed import build_sharded_index_local
+    rng = np.random.default_rng(4)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    with pytest.raises(ValueError, match="local_shard_rows"):
+        build_sharded_index_local(
+            rng.normal(size=(50, 8)).astype(np.float32), mesh,
+            global_rows=203, n_pivots=4, block_size=16)

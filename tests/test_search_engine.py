@@ -323,6 +323,9 @@ def test_unknown_backend_raises(rng):
 def test_sharded_backend_requires_mesh(rng):
     db = rng.normal(size=(64, 8)).astype(np.float32)
     idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
-    eng = SearchEngine(idx, backend="sharded")
+    # a flat 2D index can't serve the sharded backend at all — the engine
+    # now rejects the pairing at construction (clear error instead of an
+    # opaque reshape TypeError mid-trace; tests/test_backend_edges.py has
+    # the mesh-supplied variant of this regression)
     with pytest.raises(ValueError, match="mesh"):
-        eng.search(jnp.asarray(db[:2]), 3)
+        SearchEngine(idx, backend="sharded")

@@ -43,6 +43,16 @@ REQUIRED_EXACTNESS = (
     "sharded_tree_matches_brute",
 )
 
+#: additionally required from FULL runs only: quick mode deliberately
+#: skips the multi-process fleet spawn (the dedicated multiprocess CI job
+#: covers it there), so only a full run silently losing the row means a
+#: search path stopped being exercised
+REQUIRED_EXACTNESS_FULL = (
+    # the multi-host gate: 2-process distributed build bit-identical to
+    # the single-process sharded path (tools/multiprocess_smoke.py)
+    "multiprocess_matches_brute",
+)
+
 
 def _load(path: str) -> dict:
     with open(path) as f:
@@ -97,7 +107,10 @@ def compare(baseline: dict, current: dict, tolerance: float):
     # substring matching would let sharded_tree_matches_brute satisfy the
     # tree_matches_brute requirement
     leaves = {name.rsplit("/", 1)[-1] for name in cur}
-    for tag in REQUIRED_EXACTNESS:
+    required = REQUIRED_EXACTNESS
+    if not current.get("quick"):
+        required = required + REQUIRED_EXACTNESS_FULL
+    for tag in required:
         if tag not in leaves:
             errors.append(f"required exactness row {tag} missing from the "
                           f"current run — a search path is no longer "

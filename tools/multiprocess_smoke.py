@@ -1,0 +1,287 @@
+#!/usr/bin/env python
+"""Multi-host sharded search smoke: N processes x M virtual CPU devices.
+
+The one-command doctor for DESIGN.md §3.7 — proves the process-local
+build (`SearchEngine.build(..., distributed=True)`) serves the same
+datastore as the single-controller path, across real process boundaries:
+
+  1. a **reference pass** runs in one subprocess with N*M virtual devices
+     (the PR-4 single-controller sharded backend, flat and `tree_shards`)
+     and records sims/ids/stats plus the fp64 brute-force oracle;
+  2. N **worker processes** (`jax.distributed.initialize`, gloo CPU
+     collectives, M virtual devices each) each build the index from ONLY
+     their own shard rows and run the same searches over the global mesh;
+  3. every worker asserts the multi-process results are **bit-identical**
+     to the single-process sharded pass (sims exactly equal; ids
+     tie-aware), match brute force on the valid prefix, and that the
+     per-shard descent (`tree_shards=True`) prunes at least what the
+     flat per-shard scan does.
+
+`JAX_PLATFORMS=cpu` is pinned in every subprocess: the container ships a
+TPU plugin with no TPU attached, and backend autodetection otherwise
+stalls minutes in GCP-metadata retries.
+
+Run locally (2 processes x 4 devices, the CI shape):
+  PYTHONPATH=src python tools/multiprocess_smoke.py
+
+`--json PATH` writes the exactness rows in the `pruning_power` payload
+shape; `benchmarks/pruning_power.py` lifts them into the bench-gate run
+so `multiprocess_matches_brute` is a REQUIRED_EXACTNESS row
+(tools/check_bench_regression.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+K_SWEEP = (7, 80)   # below / above the block size: both merges engage
+
+
+def _corpus(rows: int, dim: int, n_queries: int):
+    """Deterministic clustered corpus (same recipe as tools/sharded_smoke).
+
+    Every participant regenerates it from the seed; workers then keep only
+    their own shard rows — the full array exists host-side only as the
+    test's data source, never inside any worker's index build.
+    """
+    import numpy as np
+
+    from repro.core import ref
+    rng = np.random.default_rng(11)
+    c = ref.normalize(rng.normal(size=(6, dim)))
+    db = ref.normalize(c[rng.integers(0, 6, rows)]
+                       + 0.05 * rng.normal(size=(rows, dim))).astype(np.float32)
+    q = ref.normalize(db[:: max(1, rows // n_queries)][:n_queries]
+                      + 0.01 * rng.normal(size=(n_queries, dim))
+                      ).astype(np.float32)
+    return db, q
+
+
+def _engines(db_or_local, mesh, args, *, distributed: bool):
+    from repro.search import SearchEngine
+    kw = dict(n_pivots=args.pivots, block_size=args.block_size, mesh=mesh)
+    if distributed:
+        kw.update(distributed=True, global_rows=args.rows)
+    flat = SearchEngine.build(db_or_local, tree_shards=False, **kw)
+    tree = SearchEngine.build(db_or_local, tree_shards=True, **kw)
+    return {"flat": flat, "tree": tree}
+
+
+def _search_all(engines, q, ks):
+    import jax.numpy as jnp
+    import numpy as np
+    out = {}
+    for name, eng in engines.items():
+        for k in ks:
+            sims, ids, stats = eng.search(jnp.asarray(q), k)
+            out[f"{name}_k{k}_sims"] = np.asarray(sims)
+            out[f"{name}_k{k}_ids"] = np.asarray(ids)
+            out[f"{name}_k{k}_blk"] = np.float64(stats.block_prune_frac)
+            if name == "tree":
+                out[f"{name}_k{k}_tfrac"] = np.float64(stats.tree_prune_frac)
+                out[f"{name}_k{k}_evfrac"] = np.float64(
+                    stats.tree_node_eval_frac)
+    return out
+
+
+def single_ref(args) -> int:
+    """Reference pass: single-process sharded engine + fp64 brute oracle."""
+    import numpy as np
+
+    import jax
+    from repro.core import ref
+
+    db, q = _corpus(args.rows, args.dim, args.queries)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    out = _search_all(_engines(db, mesh, args, distributed=False), q, K_SWEEP)
+    for k in K_SWEEP:
+        sref, iref = ref.brute_force_knn(q, db, min(k, args.rows))
+        out[f"brute_k{k}_sims"] = sref
+        out[f"brute_k{k}_ids"] = iref
+    np.savez(args.single_ref, n_devices=jax.device_count(), **out)
+    print(f"reference pass ok: {jax.device_count()} devices -> "
+          f"{args.single_ref}")
+    return 0
+
+
+def worker(args) -> int:
+    """One multi-process worker: process-local build, global search, verify."""
+    # gloo collectives + distributed.initialize must run before anything
+    # touches the backend
+    sys.path.insert(0, SRC)
+    from repro.dist.compat import multiprocess_cpu_init
+    multiprocess_cpu_init(f"127.0.0.1:{args.port}", args.nproc, args.worker)
+
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.distributed import local_shard_rows
+
+    pid = jax.process_index()
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    db, q = _corpus(args.rows, args.dim, args.queries)
+    _, owned = local_shard_rows(args.rows, mesh)
+    db_local = np.concatenate([db[start:stop] for _, start, stop in owned])
+    del db                      # the index build sees only the local rows
+
+    engines = _engines(db_local, mesh, args, distributed=True)
+    assert engines["flat"].backend_name == "sharded"
+    got = _search_all(engines, q, K_SWEEP)
+
+    ref_npz = np.load(args.ref)
+    assert int(ref_npz["n_devices"]) == jax.device_count(), (
+        int(ref_npz["n_devices"]), jax.device_count())
+    failures = []
+    for name in ("flat", "tree"):
+        for k in K_SWEEP:
+            sims, ids = got[f"{name}_k{k}_sims"], got[f"{name}_k{k}_ids"]
+            rs, ri = ref_npz[f"{name}_k{k}_sims"], ref_npz[f"{name}_k{k}_ids"]
+            if not np.array_equal(sims, rs):
+                failures.append(
+                    f"{name} k={k}: sims not bit-identical to the "
+                    f"single-process sharded pass (max |d| = "
+                    f"{np.abs(sims - rs).max()})")
+            if not np.array_equal(np.sort(ids, 1), np.sort(ri, 1)):
+                failures.append(f"{name} k={k}: id sets differ from the "
+                                f"single-process sharded pass")
+            kb = min(k, args.rows)
+            bs, bi = ref_npz[f"brute_k{k}_sims"], ref_npz[f"brute_k{k}_ids"]
+            if not np.allclose(sims[:, :kb], bs, atol=3e-5):
+                failures.append(f"{name} k={k}: sims diverge from fp64 brute")
+            if not np.array_equal(np.sort(ids[:, :kb], 1), np.sort(bi, 1)):
+                failures.append(f"{name} k={k}: id set != brute (tie-aware)")
+            if kb < k and not (np.all(ids[:, kb:] == -1)
+                               and np.all(np.isneginf(sims[:, kb:]))):
+                failures.append(f"{name} k={k}: (-inf, -1) fill violated "
+                                f"past row {kb}")
+    for k in K_SWEEP:
+        flat_blk = float(got[f"flat_k{k}_blk"])
+        tree_blk = float(got[f"tree_k{k}_blk"])
+        tfrac = float(got[f"tree_k{k}_tfrac"])
+        if tree_blk < flat_blk - 1e-6:
+            failures.append(f"k={k}: tree total pruning {tree_blk:.4f} < "
+                            f"flat {flat_blk:.4f}")
+        if tfrac < flat_blk - 1e-6:
+            failures.append(f"k={k}: per-shard descent pruning {tfrac:.4f} "
+                            f"< flat per-shard pruning {flat_blk:.4f}")
+        if not np.allclose(flat_blk, float(ref_npz[f"flat_k{k}_blk"]),
+                           rtol=1e-6):
+            failures.append(f"k={k}: flat stats diverge from single-process")
+    for f in failures:
+        print(f"[proc {pid}] FAIL: {f}", file=sys.stderr)
+    if not failures:
+        k = K_SWEEP[0]
+        print(f"[proc {pid}] ok: {args.nproc} processes x "
+              f"{jax.local_device_count()} devices, flat block_prune="
+              f"{float(got[f'flat_k{k}_blk']):.3f}, tree_prune="
+              f"{float(got[f'tree_k{k}_tfrac']):.3f}")
+    return 1 if failures else 0
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def launch(args) -> int:
+    """Spawn the reference pass, then the worker fleet; aggregate results."""
+    def env_with(devices: int) -> dict:
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        return env
+
+    size_args = ["--rows", str(args.rows), "--dim", str(args.dim),
+                 "--queries", str(args.queries), "--block-size",
+                 str(args.block_size), "--pivots", str(args.pivots)]
+    me = os.path.abspath(__file__)
+    with tempfile.TemporaryDirectory(prefix="mp_smoke_") as tmp:
+        ref_path = os.path.join(tmp, "single_ref.npz")
+        r = subprocess.run(
+            [sys.executable, me, "--single-ref", ref_path] + size_args,
+            env=env_with(args.processes * args.devices), timeout=900)
+        if r.returncode != 0:
+            print("single-process reference pass failed", file=sys.stderr)
+            return 1
+        port = _free_port()
+        workers = [
+            subprocess.Popen(
+                [sys.executable, me, "--worker", str(i), "--nproc",
+                 str(args.processes), "--port", str(port), "--ref",
+                 ref_path] + size_args,
+                env=env_with(args.devices))
+            for i in range(args.processes)
+        ]
+        rcs = []
+        for w in workers:
+            try:
+                rcs.append(w.wait(timeout=900))
+            except subprocess.TimeoutExpired:
+                w.kill()
+                rcs.append(-9)
+    ok = all(rc == 0 for rc in rcs)
+    if args.json:
+        payload = {
+            "benchmark": "pruning_power",
+            "quick": False,
+            "metrics": [
+                {"name": "pruning/multihost/multiprocess_matches_brute",
+                 "value": 1.0 if ok else 0.0,
+                 "note": f"{args.processes} processes x {args.devices} "
+                         f"devices, bit-identical to single-process "
+                         f"sharded; exactness gate: must be 1.0"},
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    if ok:
+        print(f"multiprocess smoke ok: {args.processes} processes x "
+              f"{args.devices} devices")
+        return 0
+    print(f"multiprocess smoke FAILED (worker rcs {rcs})", file=sys.stderr)
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--devices", type=int, default=4,
+                    help="virtual CPU devices per process")
+    ap.add_argument("--rows", type=int, default=4099)
+    ap.add_argument("--dim", type=int, default=24)
+    ap.add_argument("--queries", type=int, default=9)
+    ap.add_argument("--block-size", type=int, default=64)
+    ap.add_argument("--pivots", type=int, default=8)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write exactness rows (pruning_power payload shape)")
+    # internal entry points (spawned by launch)
+    ap.add_argument("--single-ref", metavar="NPZ", help=argparse.SUPPRESS)
+    ap.add_argument("--worker", type=int, default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--nproc", type=int, help=argparse.SUPPRESS)
+    ap.add_argument("--port", type=int, help=argparse.SUPPRESS)
+    ap.add_argument("--ref", metavar="NPZ", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    if args.single_ref:
+        sys.path.insert(0, SRC)
+        return single_ref(args)
+    if args.worker is not None:
+        return worker(args)
+    return launch(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
