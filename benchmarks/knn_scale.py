@@ -3,28 +3,31 @@
 Wall-clock on this CPU host (XLA jit, single core) across datastore sizes,
 all through the unified :class:`SearchEngine`.  The derived column reports
 the *work avoided* (tiles or blocks pruned), which is hardware-independent,
-alongside the measured speedup here.
+alongside the measured p50 here.
+
+Timing goes through :mod:`benchmarks.timing` — the old ad-hoc helper here
+averaged reps behind a single warmup call without recording per-rep
+samples, so one descheduled rep skewed the mean and compile time was
+invisible; :func:`benchmarks.timing.measure` separates warmup from
+individually-blocked reps and reports the robust p50.
 """
 from __future__ import annotations
 
-import time
+import os
+import sys
 
-import jax
+if __name__ == "__main__":       # runnable from anywhere, TPU probe pinned off
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import measure
 from repro.core import ref
 from repro.core.index import build_index
 from repro.search import SearchEngine
-
-
-def _time(f, *args, reps=3):
-    out = f(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / reps
 
 
 def run(sizes=(4096, 16384), d: int = 64, k: int = 10, m: int = 64):
@@ -40,16 +43,16 @@ def run(sizes=(4096, 16384), d: int = 64, k: int = 10, m: int = 64):
         base = SearchEngine(idx, backend="scan", warm_start=False,
                             best_first=False)
         eng = SearchEngine(idx, backend="scan")
-        t_brute = _time(lambda: brute.search(q, k)[:2])
-        t_base = _time(lambda: base.search(q, k)[:2])
-        t_eng = _time(lambda: eng.search(q, k)[:2])
+        t_brute = measure(lambda: brute.search(q, k)[:2], warmup=2, reps=5)
+        t_base = measure(lambda: base.search(q, k)[:2], warmup=2, reps=5)
+        t_eng = measure(lambda: eng.search(q, k)[:2], warmup=2, reps=5)
         _, _, st_base = base.search(q, k)
         _, _, st_eng = eng.search(q, k)
-        rows.append((f"knn_scale/n{n}/brute_us", t_brute * 1e6, ""))
-        rows.append((f"knn_scale/n{n}/pruned_us", t_base * 1e6,
+        rows.append((f"knn_scale/n{n}/brute_us", t_brute.p50_us, ""))
+        rows.append((f"knn_scale/n{n}/pruned_us", t_base.p50_us,
                      f"block_prune_frac={st_base.block_prune_frac:.3f}"))
-        rows.append((f"knn_scale/n{n}/engine_us", t_eng * 1e6,
-                     f"warm-start+best-first, block_prune_frac="
+        rows.append((f"knn_scale/n{n}/engine_us", t_eng.p50_us,
+                     f"tuned defaults, block_prune_frac="
                      f"{st_eng.block_prune_frac:.3f}"))
     return rows
 

@@ -1,0 +1,184 @@
+"""Wall-clock latency/QPS baseline — the measured-time gate.
+
+Everything CI gated before this harness was a pruning *fraction*
+(BENCH_pruning.json): a backend could get slower while "pruning improved".
+This harness measures what the paper actually promises — that the Eq. 13
+bound makes *exact search fast* — as p50/p99 wall-clock per backend ×
+data regime × query batch size × k, through :mod:`benchmarks.timing`
+(warmup-separated reps; the first call's compile time is never averaged
+into a latency number).
+
+Rows (all microseconds unless named otherwise):
+
+* ``latency/<regime>/<backend>/m<m>/k<k>/p50_us`` / ``p99_us`` —
+  informational absolutes (they move with the host; CI does not gate
+  them);
+* ``latency/<regime>/ratio/m<m>/k<k>/<a>_speedup_vs_<b>`` — p50 ratios
+  (pruned/brute, engine/brute, engine/base).  These are what
+  ``tools/check_bench_regression.py`` tolerance-bands: ratios of medians
+  on the same host are stable where absolute microseconds flake;
+* ``latency/<regime>/<backend>_matches_brute`` — exactness gates (1.0 =
+  identical similarity profile to fp64 brute force), hard-failed by the
+  regression gate exactly like the pruning rows.
+
+Backends measured: ``brute`` (the no-index floor), ``base`` (flat scan,
+no warm start / best-first — the pre-engine pruned path), ``engine``
+(scan with the full engine policy stack), ``tree`` (transitive Eq. 13
+descent, scan leaves), ``kernel`` (fused Pallas kernel; interpret mode
+off-TPU, so its absolute numbers on CPU measure the interpreter — its
+*ratios* are still tracked for regressions).
+
+``--quick`` keeps the full backend × regime × batch × k grid but shrinks
+the corpus and rep count — this is what the CI ``latency`` job runs and
+what the committed ``BENCH_latency.json`` baseline was produced with
+(ratios stay comparable; a quick and a full run are not, and the gate
+refuses to compare them).  ``--json PATH`` writes the machine-readable
+payload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __name__ == "__main__":       # runnable from anywhere, TPU probe pinned off
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.timing import measure
+from repro.core import ref
+from repro.core.index import build_index
+from repro.search import SearchEngine
+
+#: (batch sizes, k values) — one grid for quick and full runs, so the row
+#: names line up and a host's quick baseline stays comparable over time
+BATCH_SIZES = (8, 64)
+K_VALUES = (10, 48)
+
+#: engine variants measured per regime; "base" and "engine" share the scan
+#: backend (the pair isolates what the engine policy stack buys)
+VARIANTS = ("brute", "base", "engine", "tree", "kernel")
+
+
+def make_regime(regime: str, n: int, d: int, seed: int = 0) -> np.ndarray:
+    """The two data regimes the pruning bench established: ``clustered``
+    (realistic neural-embedding case — pruning works) and ``uniform``
+    (high-dim concentration — the bound's hard case)."""
+    rng = np.random.default_rng(seed)
+    if regime == "uniform":
+        return ref.normalize(rng.normal(size=(n, d))).astype(np.float32)
+    if regime == "clustered":
+        c = ref.normalize(rng.normal(size=(8, d)))
+        return ref.normalize(
+            c[rng.integers(0, 8, n)] + 0.05 * rng.normal(size=(n, d))
+        ).astype(np.float32)
+    raise ValueError(f"unknown regime {regime!r}")
+
+
+def build_variants(db: np.ndarray, *, block_size: int = 128) -> dict:
+    """One shared index, five engine variants over it."""
+    idx = build_index(jnp.asarray(db), n_pivots=16, block_size=block_size)
+    return {
+        "brute": SearchEngine(idx, backend="brute"),
+        "base": SearchEngine(idx, backend="scan", warm_start=False,
+                             best_first=False),
+        "engine": SearchEngine(idx, backend="scan"),
+        "tree": SearchEngine(idx, backend="tree", leaf_eval="scan"),
+        "kernel": SearchEngine(idx, backend="kernel", bm=8),
+    }
+
+
+def _matches_brute(sims, db, q, k) -> float:
+    """1.0 iff the similarity profile equals fp64 brute force."""
+    sref, _ = ref.brute_force_knn(np.asarray(q), db, k)
+    return float(np.allclose(np.asarray(sims), sref, atol=3e-5))
+
+
+def run(*, quick: bool = False, regimes=("clustered", "uniform"),
+        variants=VARIANTS, batch_sizes=BATCH_SIZES, k_values=K_VALUES,
+        warmup: int = 2, reps: int | None = None, seed: int = 0):
+    """Measure the grid; returns ``(name, value, note)`` rows."""
+    n, d = (1536, 32) if quick else (4096, 64)
+    reps = (3 if quick else 7) if reps is None else reps
+    rng = np.random.default_rng(seed + 1)
+    rows = []
+    for regime in regimes:
+        db = make_regime(regime, n, d, seed)
+        engines = build_variants(db)
+        engines = {v: engines[v] for v in variants}
+        p50 = {}
+        for m in batch_sizes:
+            q = db[rng.choice(n, m, replace=False)]
+            q = ref.normalize(
+                q + 0.01 * rng.normal(size=q.shape)).astype(np.float32)
+            qj = jnp.asarray(q)
+            for k in k_values:
+                for name, eng in engines.items():
+                    # hot path only: sims/ids block the clock, the lazy
+                    # stats scalars stay un-synced exactly as in serving
+                    t = measure(lambda e=eng: e.search(qj, k)[:2],
+                                warmup=warmup, reps=reps)
+                    p50[name, m, k] = t.p50_s
+                    tag = f"latency/{regime}/{name}/m{m}/k{k}"
+                    rows.append((f"{tag}/p50_us", t.p50_us,
+                                 f"reps={reps} warmup={warmup}"))
+                    rows.append((f"{tag}/p99_us", t.p99_us,
+                                 "max rep at small rep counts"))
+                # gated ratios: >1 means the numerator path is faster
+                rtag = f"latency/{regime}/ratio/m{m}/k{k}"
+                ratios = (("pruned_speedup_vs_brute", "brute", "base"),
+                          ("engine_speedup_vs_brute", "brute", "engine"),
+                          ("engine_speedup_vs_base", "base", "engine"))
+                for rname, slow, fast in ratios:
+                    if slow in variants and fast in variants:
+                        rows.append((f"{rtag}/{rname}",
+                                     p50[slow, m, k] / p50[fast, m, k],
+                                     f"p50({slow}) / p50({fast})"))
+        # exactness: one gate per variant per regime, at the widest cell
+        m, k = batch_sizes[-1], k_values[0]
+        q = db[rng.choice(n, m, replace=False)]
+        q = ref.normalize(
+            q + 0.01 * rng.normal(size=q.shape)).astype(np.float32)
+        for name, eng in engines.items():
+            sims, _, _ = eng.search(jnp.asarray(q), k)
+            rows.append((f"latency/{regime}/{name}_matches_brute",
+                         _matches_brute(sims, db, q, k),
+                         "exactness gate: must be 1.0"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="wall-clock latency baseline (BENCH_latency.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpus + fewer reps, same grid (CI mode; "
+                         "the committed baseline is a quick run)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows as JSON (BENCH_latency.json format)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="override timed reps per cell")
+    args = ap.parse_args(argv)
+    rows = run(quick=args.quick, reps=args.reps)
+    for name, val, note in rows:
+        print(f"{name},{val:.4f},{note}")
+    if args.json:
+        payload = {
+            "benchmark": "latency",
+            "quick": args.quick,
+            "metrics": [{"name": n, "value": round(float(v), 4), "note": t}
+                        for n, v, t in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json} ({len(rows)} metrics)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

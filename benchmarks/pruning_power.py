@@ -88,7 +88,11 @@ def _multiprocess_exactness() -> float:
         try:
             r = subprocess.run(
                 [sys.executable, smoke, "--processes", "2", "--devices", "2",
-                 "--json", out] + size, timeout=900)
+                 "--json", out] + size, timeout=900,
+                # re-pin the CPU backend for the spawned fleet: a worker
+                # inheriting an unset JAX_PLATFORMS would stall in
+                # TPU-plugin autodetection on metadata retries
+                env={**os.environ, "JAX_PLATFORMS": "cpu"})
             if r.returncode != 0:
                 return 0.0
             with open(out) as f:

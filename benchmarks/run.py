@@ -8,8 +8,15 @@ Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
   pruning_power        — the paper's declared future work: bounds inside
                          actual index structures (VP-tree / LAESA / blocks)
   knn_scale            — end-to-end search timing on this host
+  latency              — wall-clock p50/p99 per backend x regime x batch
+                         (the BENCH_latency.json grid; quick mode here)
   roofline             — §Roofline terms from the dry-run artifacts (only
                          emits rows if experiments/dryrun/ is populated)
+
+A registered benchmark that raises fails the whole run: the error is
+printed as an ``ERROR`` row AND a stderr traceback, and the exit code is
+nonzero — a silently-skipped benchmark looks identical to a passing one
+in collected CSV, so skipping is never an option.
 """
 from __future__ import annotations
 
@@ -17,35 +24,49 @@ import sys
 import traceback
 
 import os
-os.environ.setdefault("JAX_ENABLE_X64", "1")   # Table 2 runs in fp64 like the paper
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # never stall on TPU autodetect
+_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [_root, os.path.join(_root, "src")]   # runnable from anywhere
+
+import jax
 
 from benchmarks import (bound_runtime, bound_tightness, dimensionality,
-                        knn_scale, numerical_stability, pruning_power,
-                        roofline)
+                        knn_scale, latency, numerical_stability,
+                        pruning_power, roofline)
 
+#: (name, zero-arg callable returning (row_name, value, note) rows, x64).
+#: The paper-table modules run in fp64 like the paper (Table 2, §4.1–4.2);
+#: the system benches must run with x64 OFF — the Pallas kernel stores
+#: int32 ids and global-x64 would promote index literals to int64 inside
+#: the kernel.  latency runs its quick grid here (same rows as the CI
+#: job; the full grid is ``python benchmarks/latency.py`` stand-alone —
+#: never run it concurrently with the rest of this harness).
 MODULES = [
-    ("bound_tightness", bound_tightness),
-    ("numerical_stability", numerical_stability),
-    ("bound_runtime", bound_runtime),
-    ("pruning_power", pruning_power),
-    ("knn_scale", knn_scale),
-    ("dimensionality", dimensionality),
-    ("roofline", roofline),
+    ("bound_tightness", bound_tightness.run, True),
+    ("numerical_stability", numerical_stability.run, True),
+    ("bound_runtime", bound_runtime.run, True),
+    ("pruning_power", pruning_power.run, False),
+    ("knn_scale", knn_scale.run, False),
+    ("latency", lambda: latency.run(quick=True), False),
+    ("dimensionality", dimensionality.run, True),
+    ("roofline", roofline.run, False),
 ]
 
 
 def main() -> None:
     failed = 0
-    for name, mod in MODULES:
+    for name, run_rows, x64 in MODULES:
+        jax.config.update("jax_enable_x64", x64)
         try:
-            for row_name, val, note in mod.run():
+            for row_name, val, note in run_rows():
                 print(f"{row_name},{val},{note}")
         except Exception as e:
             failed += 1
             print(f"{name}/ERROR,-1,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
     if failed:
+        print(f"{failed} benchmark(s) raised — failing the run",
+              file=sys.stderr)
         sys.exit(1)
 
 

@@ -1,0 +1,101 @@
+"""Reusable wall-clock timing core for the benchmark harnesses.
+
+Every latency number this repo reports goes through :func:`measure`, which
+fixes the methodology bug the old ad-hoc helpers shared: the *first* call
+to a jitted function pays tracing + XLA compilation, so timing it (or
+averaging it into the reps) measures the compiler, not the search.  Here
+warmup and timed reps are strictly separated:
+
+* ``warmup`` calls run first and are never timed — the first one is
+  recorded as ``compile_s`` (trace + compile + run) so harnesses can
+  report dispatch-cache behavior, the rest absorb allocator/frequency
+  transients;
+* each of the ``reps`` timed calls is individually bracketed with
+  ``jax.block_until_ready`` on the call's outputs, so async dispatch
+  cannot smear one rep's device work into the next rep's clock.
+
+Per-rep times are kept (not just the mean): p50 is the number CI gates on
+(robust to a single descheduled rep), p99 surfaces tail behavior — with
+few reps it degrades to the max, which is the honest reading of "worst
+rep observed".  Ratios of p50s on the same host are stable where absolute
+microseconds are not; ``tools/check_bench_regression.py`` gates only the
+ratios.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+__all__ = ["Timing", "measure"]
+
+
+@dataclass(frozen=True)
+class Timing:
+    """Per-rep wall-clock samples from one :func:`measure` run (seconds)."""
+
+    reps_s: tuple[float, ...]   # individually-blocked timed reps
+    compile_s: float            # first warmup call: trace + compile + run
+
+    def _pct(self, q: float) -> float:
+        return float(np.percentile(np.asarray(self.reps_s), q))
+
+    @property
+    def p50_s(self) -> float:
+        return self._pct(50.0)
+
+    @property
+    def p99_s(self) -> float:
+        """99th percentile rep; with few reps this is the observed max."""
+        return self._pct(99.0)
+
+    @property
+    def min_s(self) -> float:
+        return float(min(self.reps_s))
+
+    @property
+    def mean_s(self) -> float:
+        return float(np.mean(np.asarray(self.reps_s)))
+
+    # microsecond views (what the benchmark rows report)
+    @property
+    def p50_us(self) -> float:
+        return self.p50_s * 1e6
+
+    @property
+    def p99_us(self) -> float:
+        return self.p99_s * 1e6
+
+    @property
+    def min_us(self) -> float:
+        return self.min_s * 1e6
+
+    @property
+    def compile_us(self) -> float:
+        return self.compile_s * 1e6
+
+
+def measure(fn, *, warmup: int = 2, reps: int = 5) -> Timing:
+    """Time ``fn()`` with warmup strictly separated from the timed reps.
+
+    ``fn`` takes no arguments (close over them) and returns the values to
+    block on — return everything the call produces so no device work
+    escapes the clock.  ``warmup >= 1`` (the compile must happen outside
+    the timed region); ``reps >= 1``.
+    """
+    if warmup < 1 or reps < 1:
+        raise ValueError(f"measure needs warmup >= 1 and reps >= 1, got "
+                         f"warmup={warmup} reps={reps}")
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    compile_s = time.perf_counter() - t0
+    for _ in range(warmup - 1):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(reps):
+        t1 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t1)
+    return Timing(tuple(samples), compile_s)

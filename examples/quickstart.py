@@ -34,7 +34,8 @@ sims, ids, stats = engine.search(queries, 10)
 sims_b, ids_b = search_brute(engine.index, queries, 10)
 np.testing.assert_allclose(np.asarray(sims), np.asarray(sims_b), atol=1e-6)
 print(f"\nexact 10-NN over 20k vectors (backend={stats.backend}, "
-      f"τ warm-start + best-first order): "
+      f"warm_start={stats.warm_start} best_first={stats.best_first} — "
+      f"time-tuned defaults): "
       f"{stats.block_prune_frac:.0%} of (query, block) work pruned, "
       f"results identical to brute force")
 

@@ -305,8 +305,14 @@ def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None,
                         warm_start_blocks: int | None = None,
                         element_stats: bool = False,
                         with_stats: bool = False,
-                        margin: float = 4e-7):
+                        margin: float = 4e-7,
+                        trace_hook=None):
     """Build a jitted ``(index, queries, k[, tree]) -> (sims, gids)`` closure.
+
+    ``trace_hook`` (optional zero-arg callable) is invoked inside the
+    traced body, i.e. exactly once per trace+compile and never on cached
+    dispatches — the engine passes its retrace counter so the sharded
+    path's ``SearchStats.retraces`` is as observable as the flat ones.
 
     ``axis_names`` defaults to *all* mesh axes — the datastore shards over
     every chip.  Results are fully replicated.  With ``with_stats`` the
@@ -326,6 +332,8 @@ def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None,
 
     @functools.partial(jax.jit, static_argnames=("k",))
     def run(index: BlockIndex, queries: Array, k: int, tree=None):
+        if trace_hook is not None:
+            trace_hook()
         body = functools.partial(
             sharded_search_local, k=k, axis_names=axis_names, prune=prune,
             warm_start=warm_start, best_first=best_first,

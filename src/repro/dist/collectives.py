@@ -65,5 +65,11 @@ def global_tau_merge(sims: Array, valid: Array, k: int, axis_names) -> Array:
     provably contains no global top-k member, so per-shard pruning
     against this one broadcast scalar per query is globally safe.
     """
+    from repro.dist.compat import optimization_barrier
+
     top_s, top_v = masked_topk_merge(sims, valid, k, axis_names)
+    # barrier before slicing the k-th column: the folded [k-1:k] slice
+    # breaks XLA's TopkRewriter and the merge's top_k silently lowers to
+    # a full sort (see repro.kernels.ref.kth_value for the measurement)
+    top_s = optimization_barrier(top_s)
     return jnp.where(top_v[:, -1], top_s[:, -1], -jnp.inf)

@@ -137,7 +137,9 @@ def tau_warm_start(qn: Array, db_blocks: Array, valid_blocks: Array,
     vb = valid_blocks[best].reshape(m, n_pre * bs)
     scores = jnp.einsum("md,mcd->mc", qn, blk)
     scores = jnp.where(vb, scores, -jnp.inf)
-    tau = jax.lax.top_k(scores, k)[0][:, -1]
+    # kth_value, not top_k(...)[0][:, -1]: the naive slice breaks XLA's
+    # TopkRewriter and this line becomes a full sort (~10x, see kref)
+    tau = kref.kth_value(scores, k)
     return jnp.where(jnp.isfinite(tau), tau, -jnp.inf)
 
 
@@ -186,6 +188,7 @@ def scan_search(
     tau0: Array | None = None,
     ub_all: Array | None = None,
     leaf_mask: Array | None = None,
+    db_scratch: Array | None = None,
 ):
     """Pure-JAX block scan (the portable backend; DESIGN.md §2 for the block
     granularity, §3.3 for the backend contract this implements).
@@ -205,6 +208,14 @@ def scan_search(
     level) so it is not re-evaluated here, and ``leaf_mask`` [m, nb] marks
     blocks a caller has *proven* prunable (mask False ⇒ skipped and
     counted in ``blk_pruned``; exactness is the caller's obligation).
+
+    ``db_scratch`` [nb, bs, d] (``best_first`` only) is an engine-owned
+    recycled buffer for the per-call best-first database permutation —
+    the one large per-call allocation this loop makes.  When supplied,
+    the permuted blocks are routed through it and returned as an extra
+    trailing output, so a caller that donates the buffer (the engine's
+    fused dispatch cache does) lets XLA write the gather in place and
+    cycle the same memory call over call.
     """
     m = qn.shape[0]
     nb, bs = index.n_blocks, index.block_size
@@ -235,9 +246,16 @@ def scan_search(
         xs = xs + (ub_all.T,)                                 # [nb, m]
     if has_mask:
         xs = xs + (leaf_mask.T,)                              # [nb, m]
+    perm_db = None
     if best_first:
         order = best_first_order(ub_all)
         xs = tuple(a[order] for a in xs)
+        if db_scratch is not None:
+            # route the permuted db through the caller's scratch: the
+            # .set is the gather's destination, so a donated buffer is
+            # written in place instead of freshly allocated per call
+            perm_db = db_scratch.at[:].set(xs[0])
+            xs = (perm_db,) + xs[1:]
 
     init = (
         jnp.tile((tau0 - 1e-6)[:, None], (1, k)),             # seeded top sims
@@ -279,6 +297,8 @@ def scan_search(
         return (new_s, new_i, blk_pruned, elem_pruned), None
 
     (top_s, top_i, blk_pruned, elem_pruned), _ = jax.lax.scan(step, init, xs)
+    if perm_db is not None:
+        return top_s, top_i, blk_pruned, elem_pruned, perm_db
     return top_s, top_i, blk_pruned, elem_pruned
 
 
@@ -431,6 +451,40 @@ class ScanBackend:
             raw["elem_prune_frac"] = elem_pruned / (m * max(1, eng.n_valid))
         return s, ids, raw
 
+    def make_fused(self, eng, k, *, prune, element_stats, donate):
+        """One-dispatch callee: prep + τ prescan + scan + id map, one jit.
+
+        ``donate``: also thread the engine-owned best-first permutation
+        scratch through the call (donated, cycled by the engine's cache
+        entry) so the one large per-call buffer is written in place.
+        """
+        note = eng._note_trace
+        margin, warm_start = eng.margin, eng.warm_start
+        best_first, wsb = eng.best_first, eng.warm_start_blocks
+        n_valid = max(1, eng.n_valid)
+
+        def body(index, queries, scratch=None):
+            note()          # Python side effect: fires at trace time only
+            qn, qp = prep_queries(index, queries)
+            out = scan_search(
+                index, qn, qp, k, prune=prune, margin=margin,
+                warm_start=warm_start, best_first=best_first,
+                element_stats=element_stats, warm_start_blocks=wsb,
+                db_scratch=scratch)
+            s, pos, blk_pruned, elem_pruned = out[:4]
+            ids = map_row_ids(index.row_ids, pos)
+            m, nb = qn.shape[0], index.n_blocks
+            raw = {"block_prune_frac": blk_pruned / (m * nb)}
+            if element_stats:
+                raw["elem_prune_frac"] = elem_pruned / (m * n_valid)
+            if scratch is not None:
+                return s, ids, raw, out[4]
+            return s, ids, raw
+
+        if donate and best_first:
+            return jax.jit(body, donate_argnums=(2,))
+        return jax.jit(lambda index, queries: body(index, queries))
+
 
 @register_backend("kernel")
 class KernelBackend:
@@ -455,6 +509,36 @@ class KernelBackend:
                 elem.astype(jnp.float32).sum() / (m * max(1, eng.n_valid)))
         return s, ids, raw
 
+    def make_fused(self, eng, k, *, prune, element_stats, donate):
+        """Prep + fused Pallas search + id map as one jitted dispatch."""
+        note = eng._note_trace
+        bm, bn, sq = eng.bm, eng.bn, eng.sort_queries
+        warm_start, best_first = eng.warm_start, eng.best_first
+        margin, interpret, wsb = eng.margin, eng.interpret, \
+            eng.warm_start_blocks
+        n_valid = max(1, eng.n_valid)
+
+        @jax.jit
+        def fused(index, queries):
+            note()
+            qn, qp = prep_queries(index, queries)
+            s, pos, computed, elem = kernel_search(
+                index, qn, qp, k, bm=bm, bn=bn, prune=prune,
+                sort_queries=sq, warm_start=warm_start,
+                best_first=best_first, margin=margin, interpret=interpret,
+                element_stats=element_stats, warm_start_blocks=wsb)
+            ids = map_row_ids(index.row_ids, pos)
+            frac = computed.mean()
+            raw = {"block_prune_frac": 1.0 - frac,
+                   "tile_computed_frac": frac}
+            if element_stats:
+                m = qn.shape[0]
+                raw["elem_prune_frac"] = (
+                    elem.astype(jnp.float32).sum() / (m * n_valid))
+            return s, ids, raw
+
+        return fused
+
 
 @register_backend("brute")
 class BruteBackend:
@@ -473,6 +557,23 @@ class BruteBackend:
             # docs/search-api.md)
             raw["elem_prune_frac"] = 0.0
         return s, ids, raw
+
+    def make_fused(self, eng, k, *, prune, element_stats, donate):
+        """Prep + matmul + top-k + id map as one jitted dispatch."""
+        note = eng._note_trace
+
+        @jax.jit
+        def fused(index, queries):
+            note()
+            qn, _ = prep_queries(index, queries)
+            s, pos = brute_search(index, qn, k)
+            ids = map_row_ids(index.row_ids, pos)
+            raw = {"block_prune_frac": 0.0}
+            if element_stats:
+                raw["elem_prune_frac"] = 0.0
+            return s, ids, raw
+
+        return fused
 
 
 @register_backend("sharded")
@@ -540,7 +641,8 @@ class ShardedBackend:
                 eng.mesh, eng.axis_names, with_stats=True, prune=prune,
                 warm_start=eng.warm_start, best_first=eng.best_first,
                 warm_start_blocks=eng.warm_start_blocks,
-                element_stats=element_stats, margin=eng.margin)
+                element_stats=element_stats, margin=eng.margin,
+                trace_hook=eng._note_trace)
             eng._sharded_fn[key] = fn
         q = self._replicated_queries(eng, queries)
         if use_tree:

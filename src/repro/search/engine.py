@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.index import BlockIndex, build_index
 from repro.search import backends as _bk
+from repro.search import defaults as _defaults
 from repro.search.stats import SearchStats
 
 __all__ = ["SearchEngine", "auto_backend"]
@@ -94,11 +95,17 @@ class SearchEngine:
         (every backend; the multi-block schedule is DESIGN.md §3.4, so the
         seeding engages for every ``k``, including ``k`` > block size).
       warm_start_blocks: widen the warm-start prescan to at least this many
-        bound-ranked blocks (default: the ``ceil(k / block)`` floor).  More
-        blocks = a tighter τ seed at the cost of a larger prescan gather;
-        never fewer than the floor, clamped to the block count.
+        bound-ranked blocks.  ``None`` (default) defers to the time-tuned
+        per-regime table in :mod:`repro.search.defaults` (whose own
+        fallback is the ``ceil(k / block)`` floor; pass ``0`` to force the
+        floor).  More blocks = a tighter τ seed at the cost of a larger
+        prescan gather; never fewer than the floor, clamped to the block
+        count.
       best_first: visit database blocks in descending upper-bound order
         (per query tile) so τ rises early and later blocks prune.
+        ``None`` (default) defers to the time-tuned per-regime table
+        (scan/tree backends on the swept platform; ``True`` elsewhere) —
+        explicit ``True`` / ``False`` always wins.
       element_stats: default for ``search(..., element_stats=...)`` — also
         report ``SearchStats.elem_prune_frac``, the fraction of (query,
         valid row) pairs whose *individual* Eq. 13 bound prunes them
@@ -115,7 +122,8 @@ class SearchEngine:
       leaf_eval: tree-backend leaf stage — ``"scan"`` (portable, traceable
         inside an outer jit), ``"kernel"`` (compact the surviving leaves
         and run the fused Pallas kernel over just those rows;
-        host-orchestrated), or ``"auto"`` (kernel on TPU, scan elsewhere).
+        host-orchestrated), or ``"auto"`` (the time-tuned per-regime
+        table when it binds, else kernel on TPU / scan elsewhere).
         Ignored by non-tree backends.
       bm / bn / sort_queries / interpret: kernel-backend tile options
         (ignored by other backends; ``bm`` / ``interpret`` also apply to
@@ -131,7 +139,7 @@ class SearchEngine:
         axis_names=None,
         warm_start: bool = True,
         warm_start_blocks: int | None = None,
-        best_first: bool = True,
+        best_first: bool | None = None,
         element_stats: bool = False,
         tree_shards: bool | None = None,
         margin: float = 4e-7,
@@ -145,16 +153,15 @@ class SearchEngine:
         self.mesh = mesh
         self.axis_names = axis_names
         self.warm_start = warm_start
-        self.warm_start_blocks = warm_start_blocks
-        self.best_first = best_first
         self.element_stats = element_stats
         self.margin = margin
-        self.leaf_eval = leaf_eval
         self.bm = bm
         self.bn = bn
         self.sort_queries = sort_queries
         self.interpret = interpret
         self._sharded_fn = {}
+        self._fn_cache = {}                     # fused dispatch cache
+        self._traces = 0                        # jit traces observed, ever
         self._tree_index = None                 # built lazily by TreeBackend
         self._tree_valid_nodes = 0              # cached host count, ditto
         self._shard_tree = None                 # lazily by ShardedBackend
@@ -170,6 +177,23 @@ class SearchEngine:
             self._tree_shards_enabled = False
         self.backend_name = (auto_backend(index, mesh)
                              if backend == "auto" else backend)
+        # time-tuned per-regime defaults (repro.search.defaults): every
+        # knob left at its sentinel resolves through the measured table;
+        # the regime is detected from the index's Eq. 13 interval widths
+        # (one host sync here, never on the search path).  Explicit knob
+        # values and non-swept backends keep the static behavior.
+        self.regime = (_defaults.detect_regime(index)
+                       if self.backend_name in ("scan", "tree") else None)
+        self.best_first = (bool(best_first) if best_first is not None
+                           else _defaults.tuned_default("best_first",
+                                                        self.regime))
+        self.warm_start_blocks = (
+            warm_start_blocks if warm_start_blocks is not None
+            else _defaults.tuned_default("warm_start_blocks", self.regime))
+        if leaf_eval == "auto":
+            leaf_eval = (_defaults.tuned_default("leaf_eval", self.regime)
+                         or "auto")
+        self.leaf_eval = leaf_eval
         # a flat 2D index cannot serve the sharded backend: without this
         # check the shard_map body peels a "shard axis" off the real data
         # and dies mid-trace in an opaque reshape TypeError.  Supplying a
@@ -268,6 +292,64 @@ class SearchEngine:
                           seed=seed)
         return cls(idx, **engine_kw)
 
+    # ------------------------------------------------- fused dispatch cache
+    def _note_trace(self):
+        """Trace-time side effect: fused callables call this from inside
+        their traced bodies, so it fires exactly once per jit trace and
+        never on a cached dispatch — the retrace counter behind
+        ``SearchStats.retraces``."""
+        self._traces += 1
+
+    def _knob_key(self):
+        return (self.warm_start, self.warm_start_blocks, self.best_first,
+                self.margin, self.leaf_eval, self.bm, self.bn,
+                self.sort_queries, self.interpret)
+
+    def _fused_callable(self, queries, kk: int, prune: bool,
+                        element_stats: bool):
+        """The cached one-dispatch callee for this call signature, or
+        ``None`` when the backend (or this configuration) has no fused
+        path and the legacy ``backend.run`` multi-dispatch is used.
+
+        Keyed on ``(backend, k, query shape, dtype, knobs)``: a repeated
+        call hits both this cache and the callee's compiled executable
+        (0 retraces); changing ``k`` or the batch shape misses exactly
+        once.  The cache entry also owns the donated scratch buffer the
+        scan backend's best-first permutation cycles through.
+        """
+        make = getattr(self.backend, "make_fused", None)
+        if make is None or len(getattr(queries, "shape", ())) != 2:
+            return None
+        # donated scratch needs a concrete buffer to cycle; under an outer
+        # trace (serve decode) use the donation-free variant of the callee
+        donate = (self.backend_name == "scan" and self.best_first
+                  and not isinstance(queries, jax.core.Tracer))
+        key = (self.backend_name, kk, tuple(queries.shape),
+               str(queries.dtype), prune, element_stats, donate,
+               self._knob_key())
+        entry = self._fn_cache.get(key)
+        if entry is None:
+            fn = make(self, kk, prune=prune, element_stats=element_stats,
+                      donate=donate)
+            entry = [fn, None]          # None fn = remembered "unsupported"
+            self._fn_cache[key] = entry
+        if entry[0] is None:
+            return None
+        if not donate:
+            return lambda q: entry[0](self.index, q)
+
+        def call(q):
+            scratch = entry[1]
+            if scratch is None:
+                nb, bs = self.n_blocks, self.index.block_size
+                scratch = jnp.zeros((nb, bs, self.index.db.shape[-1]),
+                                    jnp.float32)
+            sims, ids, raw, scratch_out = entry[0](self.index, q, scratch)
+            entry[1] = scratch_out      # cycle: donated next call
+            return sims, ids, raw
+
+        return call
+
     # ------------------------------------------------------------ searching
     def search(self, queries, k: int, *, prune: bool = True,
                element_stats: bool | None = None):
@@ -284,12 +366,31 @@ class SearchEngine:
         same fill the valid-row contract above already uses, applied
         uniformly here so no backend's inner ``top_k`` sees a k wider
         than its score matrix.
+
+        The steady-state hot path is one jitted dispatch: query prep, the
+        τ prescan, the backend inner loop and the id mapping are fused
+        into a per-``(backend, k, shape, knobs)`` cached callee (see
+        ``SearchStats.retraces`` — 0 on a warm call).  Backends without a
+        fusable configuration fall back to the legacy multi-dispatch
+        ``backend.run``.
         """
         if element_stats is None:
             element_stats = self.element_stats
+        if not hasattr(queries, "shape"):
+            queries = jnp.asarray(queries)
         kk = min(k, self.n_slots)
-        sims, ids, raw = self.backend.run(
-            self, queries, kk, prune=prune, element_stats=element_stats)
+        traces_before = self._traces
+        fused = self._fused_callable(queries, kk, prune, element_stats)
+        if fused is not None:
+            sims, ids, raw = fused(queries)
+            retraces = self._traces - traces_before
+        else:
+            sims, ids, raw = self.backend.run(
+                self, queries, kk, prune=prune, element_stats=element_stats)
+            # the sharded closure carries the trace hook; other legacy
+            # paths (tree kernel-leaf) are multi-dispatch -> unknown
+            retraces = (self._traces - traces_before
+                        if self.backend_name == "sharded" else None)
         if kk < k:
             sims, ids = _pad_topk(sims, ids, k=k)
         stats = SearchStats(
@@ -304,6 +405,7 @@ class SearchEngine:
             tree_node_eval_frac=raw.get("tree_node_eval_frac"),
             warm_start=self.warm_start,
             best_first=self.best_first,
+            retraces=retraces,
             extras={k_: v for k_, v in raw.items()
                     if k_ not in ("block_prune_frac", "tile_computed_frac",
                                   "elem_prune_frac", "tree_prune_frac",

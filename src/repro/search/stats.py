@@ -53,6 +53,18 @@ class SearchStats:
     evaluate — the flat scan is 1.0 at the leaf level by construction,
     so lower means the hierarchy is paying for itself.
 
+    ``retraces`` is the number of jit traces (trace + XLA compile) this
+    ``search`` call triggered through the engine's compiled-function
+    cache: 0 means the fully-fused hot path was dispatch-cached (the
+    steady state), 1 means this call paid one compilation (first call,
+    or a new ``(backend, k, query shape, dtype, knobs)`` key).  It is a
+    host ``int``, not a lazy scalar — the counter is a Python side effect
+    that fires at trace time only.  ``None`` means the call went through
+    a path the engine cannot count (the tree backend's host-orchestrated
+    kernel-leaf stage).  Under an outer jit the reported value reflects
+    trace-time work: the outer trace's first pass re-traces the fused
+    callee, later cached outer calls never re-enter Python at all.
+
     **Absent-stage fields are ``None``, never 0.**  A stage that did not
     run (no tree built, element stats off, not the kernel) reports
     ``None``; ``0.0`` always means the stage ran and pruned/skipped
@@ -72,6 +84,7 @@ class SearchStats:
     tree_node_eval_frac: float | None = None
     warm_start: bool = False
     best_first: bool = False
+    retraces: int | None = None
     extras: dict = field(default_factory=dict)
 
     # -- dict-style compatibility with the old ad-hoc stats dicts ----------

@@ -250,7 +250,15 @@ def tree_warm_start_topk(tree: TreeIndex, qn: Array, qp: Array, k: int,
     scores = jnp.einsum("md,mcd->mc", qn, blk)
     scores = jnp.where(vb, scores, -jnp.inf)
     kk = min(k, w * bs)
+    # barrier: single-device callers immediately slice the k-th column
+    # (tree_warm_start), which would fold into top_k's internal sort+slice
+    # and break XLA's TopkRewriter — a silent full-sort lowering (~10x on
+    # CPU; see repro.kernels.ref.kth_value).  Pinning the [m, k] values
+    # here protects every caller.
+    from repro.dist.compat import optimization_barrier
+
     top_s, sel = jax.lax.top_k(scores, kk)
+    top_s = optimization_barrier(top_s)
     top_v = jnp.take_along_axis(vb, sel, axis=1)
     if kk < k:                                 # shard smaller than k: pad
         top_s = jnp.pad(top_s, ((0, 0), (0, k - kk)),
@@ -438,17 +446,60 @@ class TreeBackend:
             eng._tree_valid_nodes = tree.n_valid_nodes
         return tree
 
+    @staticmethod
+    def _resolve_leaf_eval(eng) -> str:
+        if eng.leaf_eval != "auto":
+            return eng.leaf_eval
+        # same VMEM guard as the flat kernel's auto-selection: the
+        # Pallas kernel keeps the whole feature dim resident
+        return ("kernel" if jax.default_backend() == "tpu"
+                and eng.index.db.shape[-1] <= 4096 else "scan")
+
+    def make_fused(self, eng, k, *, prune, element_stats, donate):
+        """One-dispatch callee: prep + beam seed + descent + leaf scan +
+        id map in one jit.  ``None`` for the kernel-leaf configuration —
+        that stage is host-orchestrated (data-dependent compaction) and
+        keeps the legacy multi-dispatch path."""
+        leaf_eval = self._resolve_leaf_eval(eng)
+        if leaf_eval == "kernel" and prune and k <= eng.index.block_size:
+            return None
+        tree = self._tree(eng)          # host-side build, outside the jit
+        note = eng._note_trace
+        margin, warm_start = eng.margin, eng.warm_start
+        best_first, wsb = eng.best_first, eng.warm_start_blocks
+        n_valid_rows = max(1, eng.n_valid)
+        n_valid_nodes = max(1, eng._tree_valid_nodes)
+
+        @jax.jit
+        def fused(index, tree, queries):
+            note()
+            qn, qp = _bk.prep_queries(index, queries)
+            m, nb = qn.shape[0], tree.n_blocks
+            top_s, pos, blk_pruned, elem_pruned, tree_pruned, evals = \
+                tree_search(
+                    tree, qn, qp, k, prune=prune, margin=margin,
+                    warm_start=warm_start, best_first=best_first,
+                    element_stats=element_stats, warm_start_blocks=wsb)
+            ids = _bk.map_row_ids(index.row_ids, pos)
+            raw = {
+                "block_prune_frac": blk_pruned / (m * nb),
+                "tree_levels": tree.n_levels,
+            }
+            if prune:
+                raw["tree_prune_frac"] = tree_pruned / (m * nb)
+                raw["tree_node_eval_frac"] = evals / (m * n_valid_nodes)
+            if element_stats:
+                raw["elem_prune_frac"] = elem_pruned / (m * n_valid_rows)
+            return top_s, ids, raw
+
+        return lambda index, queries: fused(index, tree, queries)
+
     def run(self, eng, queries, k, *, prune=True, element_stats=False):
         tree = self._tree(eng)
         qn, qp = _bk.prep_queries(eng.index, queries)
         m, nb = qn.shape[0], tree.n_blocks
 
-        leaf_eval = eng.leaf_eval
-        if leaf_eval == "auto":
-            # same VMEM guard as the flat kernel's auto-selection: the
-            # Pallas kernel keeps the whole feature dim resident
-            leaf_eval = ("kernel" if jax.default_backend() == "tpu"
-                         and eng.index.db.shape[-1] <= 4096 else "scan")
+        leaf_eval = self._resolve_leaf_eval(eng)
         if leaf_eval == "kernel" and prune and k <= tree.block_size:
             return self._run_kernel_leaves(eng, tree, qn, qp, k,
                                            element_stats=element_stats)

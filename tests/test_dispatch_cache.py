@@ -1,0 +1,122 @@
+"""Engine dispatch cache: the hot path must not retrace.
+
+ISSUE 6 tentpole (b): ``SearchEngine.search`` caches one fused jitted
+callee per ``(backend, k, query shape, knob tuple)``, so a warm repeated
+call costs a single dispatch of an already-compiled executable.  The
+cache is observable through ``SearchStats.retraces`` — a host-side
+counter bumped by a trace-time side effect inside every fused body, so it
+counts *traces*, not calls.  These tests pin the cache contract:
+
+* a second identical call reports ``retraces == 0``;
+* changing ``k`` or the batch shape misses the cache exactly once, and
+  switching back to an earlier signature hits again (entries are
+  retained, not evicted);
+* the scan backend's donated best-first scratch buffer cycles without
+  corrupting results across repeated calls;
+* tracer queries (an outer ``jax.jit``, the serve path) still work —
+  donation is disabled there, results stay exact.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ref
+from repro.search import SearchEngine
+
+N, D, K = 512, 16, 8
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(7)
+    c = ref.normalize(rng.normal(size=(4, D)))
+    return ref.normalize(c[rng.integers(0, 4, N)] +
+                         0.1 * rng.normal(size=(N, D))).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def queries(db):
+    rng = np.random.default_rng(8)
+    q = db[rng.choice(N, 16, replace=False)]
+    return ref.normalize(q + 0.01 * rng.normal(size=q.shape)).astype(
+        np.float32)
+
+
+def _engine(db, backend, **kw):
+    return SearchEngine.build(db, n_pivots=4, block_size=64,
+                              backend=backend, **kw)
+
+
+@pytest.mark.parametrize("backend", ["brute", "scan", "tree", "kernel"])
+def test_warm_call_does_not_retrace(db, queries, backend):
+    eng = _engine(db, backend)
+    _, _, first = eng.search(queries, K)
+    sims, ids, warm = eng.search(queries, K)
+    assert first.retraces >= 1            # the cold call paid the trace
+    assert warm.retraces == 0             # ...exactly once
+    sref, _ = ref.brute_force_knn(queries, db, K)
+    np.testing.assert_allclose(np.asarray(sims), sref, atol=3e-5)
+
+
+@pytest.mark.parametrize("backend", ["brute", "scan", "tree"])
+def test_k_and_shape_changes_miss_exactly_once(db, queries, backend):
+    eng = _engine(db, backend)
+    _, _, cold = eng.search(queries, K)
+    per_trace = cold.retraces             # fused = 1 trace per signature
+    assert per_trace >= 1
+
+    _, _, st_k = eng.search(queries, K + 3)
+    assert st_k.retraces == per_trace     # new k -> one new callee
+
+    _, _, st_m = eng.search(queries[:5], K)
+    assert st_m.retraces == per_trace     # new batch shape -> one more
+
+    for q, k in ((queries, K), (queries, K + 3), (queries[:5], K)):
+        _, _, st = eng.search(q, k)
+        assert st.retraces == 0           # all three signatures retained
+
+
+def test_best_first_donated_scratch_stays_exact(db, queries):
+    eng = _engine(db, "scan", best_first=True)
+    sref, _ = ref.brute_force_knn(queries, db, K)
+    for _ in range(4):                    # scratch donates + cycles each call
+        sims, _, st = eng.search(queries, K)
+        np.testing.assert_allclose(np.asarray(sims), sref, atol=3e-5)
+    assert st.retraces == 0
+
+
+def test_tracer_queries_skip_donation_and_stay_exact(db, queries):
+    eng = _engine(db, "scan", best_first=True)
+
+    @jax.jit
+    def serve(q):
+        sims, ids, _ = eng.search(q, K)
+        return sims, ids
+
+    sref, _ = ref.brute_force_knn(queries, db, K)
+    for _ in range(2):
+        sims, _ = serve(queries)
+        np.testing.assert_allclose(np.asarray(sims), sref, atol=3e-5)
+
+
+def test_unfusable_path_reports_unknown_retraces(db, queries):
+    # tree + kernel leaves + pruning is the one legacy multi-dispatch
+    # configuration left: retraces must be None (uncountable), never a
+    # wrong number
+    eng = _engine(db, "tree", leaf_eval="kernel")
+    sims, _, st = eng.search(queries, K)
+    assert st.retraces is None
+    sref, _ = ref.brute_force_knn(queries, db, K)
+    np.testing.assert_allclose(np.asarray(sims), sref, atol=3e-5)
+
+
+def test_stats_dict_roundtrips_retraces(db, queries):
+    eng = _engine(db, "scan")
+    _, _, st = eng.search(queries, K)
+    assert st.as_dict()["retraces"] == st.retraces

@@ -1,8 +1,11 @@
 #!/usr/bin/env python
-"""Fail CI when pruning power regresses against the committed baseline.
+"""Fail CI when a committed benchmark baseline regresses.
 
-Compares a fresh ``benchmarks/pruning_power.py --json`` output against the
-checked-in ``BENCH_pruning.json``:
+Compares a fresh ``--json`` output against its checked-in baseline.  Two
+payload kinds are understood (matched on the payload's ``benchmark`` tag;
+baseline and current must agree):
+
+``pruning_power`` (``BENCH_pruning.json``):
 
 * **exactness gates** (metric names ending in ``_matches_brute``) must be
   exactly 1.0 in the current run — any other value is a hard failure
@@ -12,17 +15,31 @@ checked-in ``BENCH_pruning.json``:
   prune/prunable fractions may not drop by more than ``--tolerance``,
   exact-computed fractions (``*_exact_frac``, ``*_computed_frac``, lower =
   better) may not rise by more than it.  Improvements never fail — they
-  are printed as notices suggesting a re-baseline;
-* a baseline metric missing from the current run fails (a benchmark row
-  was silently dropped); new current-only metrics are informational;
-* the two files must have been produced with the same ``--quick`` flag —
-  quick and full runs use different corpora and are not comparable.
+  are printed as notices suggesting a re-baseline.
+
+``latency`` (``BENCH_latency.json``):
+
+* the same ``_matches_brute`` hard gate;
+* ``*speedup*`` rows (p50 ratios, higher = better) are banded
+  **multiplicatively** by ``--ratio-tolerance``: the gate fails when the
+  current ratio falls below ``baseline / (1 + ratio_tolerance)``.  Ratios
+  of p50s taken on the same host in the same run are stable where
+  absolute microseconds are not — which is why
+* absolute ``*_us`` rows are **informational only**: they move with the
+  host the run happened on and are never gated.
+
+For both kinds: a baseline metric missing from the current run fails (a
+benchmark row was silently dropped, except never-gated ``*_us`` rows);
+new current-only metrics are informational; and the two files must have
+been produced with the same ``--quick`` flag — quick and full runs use
+different corpora and are not comparable.
 
 Exit code 1 with one line per violation.
 
 Usage:
   python tools/check_bench_regression.py --current out.json \\
-      [--baseline BENCH_pruning.json] [--tolerance 0.05]
+      [--baseline BENCH_pruning.json] [--tolerance 0.05] \\
+      [--ratio-tolerance 0.35]
 """
 from __future__ import annotations
 
@@ -53,17 +70,38 @@ REQUIRED_EXACTNESS_FULL = (
     "multiprocess_matches_brute",
 )
 
+#: exactness rows every latency run must produce: one per measured
+#: variant per regime (latency.py emits them per regime; the leaf names
+#: are regime-independent)
+REQUIRED_EXACTNESS_LATENCY = (
+    "brute_matches_brute",
+    "base_matches_brute",
+    "engine_matches_brute",
+    "tree_matches_brute",
+    "kernel_matches_brute",
+)
+
+KNOWN_KINDS = ("pruning_power", "latency")
+
 
 def _load(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
-    if payload.get("benchmark") != "pruning_power":
-        sys.exit(f"{path}: not a pruning_power payload")
+    if payload.get("benchmark") not in KNOWN_KINDS:
+        sys.exit(f"{path}: not one of {KNOWN_KINDS} "
+                 f"(benchmark={payload.get('benchmark')!r})")
     return payload
 
 
-def compare(baseline: dict, current: dict, tolerance: float):
+def compare(baseline: dict, current: dict, tolerance: float,
+            ratio_tolerance: float = 0.35):
     errors, notices = [], []
+    kind = current.get("benchmark")
+    if baseline.get("benchmark") != kind:
+        errors.append(
+            f"payload-kind mismatch: baseline {baseline.get('benchmark')!r} "
+            f"vs current {kind!r} — wrong baseline file?")
+        return errors, notices
     if bool(baseline.get("quick")) != bool(current.get("quick")):
         errors.append(
             f"quick-mode mismatch: baseline quick={baseline.get('quick')} "
@@ -72,11 +110,15 @@ def compare(baseline: dict, current: dict, tolerance: float):
         return errors, notices
     base = {m["name"]: m["value"] for m in baseline["metrics"]}
     cur = {m["name"]: m["value"] for m in current["metrics"]}
+    latency = kind == "latency"
 
     for name, bval in base.items():
+        informational = latency and name.endswith("_us")
         if name not in cur:
-            errors.append(f"{name}: present in baseline but missing from "
-                          f"the current run (benchmark row dropped?)")
+            if not informational:
+                errors.append(f"{name}: present in baseline but missing "
+                              f"from the current run (benchmark row "
+                              f"dropped?)")
             continue
         cval = cur[name]
         if name.endswith("_matches_brute"):
@@ -84,6 +126,21 @@ def compare(baseline: dict, current: dict, tolerance: float):
                 errors.append(f"{name}: EXACTNESS MISMATCH — current "
                               f"{cval} != 1.0 (result set no longer equals "
                               f"brute force); hard failure")
+            continue
+        if informational:
+            continue            # absolute microseconds move with the host
+        if latency and "speedup" in name:
+            # multiplicative band on a p50 ratio (higher = better)
+            floor = bval / (1.0 + ratio_tolerance)
+            ceil_ = bval * (1.0 + ratio_tolerance)
+            if cval < floor:
+                errors.append(
+                    f"{name}: speedup ratio fell {bval:.4f} -> {cval:.4f} "
+                    f"(< {floor:.4f}, ratio tolerance {ratio_tolerance})")
+            elif cval > ceil_:
+                notices.append(f"{name}: speedup improved {bval:.4f} -> "
+                               f"{cval:.4f} — consider re-baselining "
+                               f"BENCH_latency.json")
             continue
         lower_better = any(tag in name for tag in LOWER_BETTER)
         delta = cval - bval
@@ -95,7 +152,7 @@ def compare(baseline: dict, current: dict, tolerance: float):
                           f"(|Δ|={abs(delta):.4f} > tolerance {tolerance})")
         elif better:
             notices.append(f"{name}: improved {bval:.4f} -> {cval:.4f} — "
-                           f"consider re-baselining BENCH_pruning.json")
+                           f"consider re-baselining the committed baseline")
 
     for name in sorted(set(cur) - set(base)):
         notices.append(f"{name}: new metric (value {cur[name]}), not in "
@@ -107,9 +164,12 @@ def compare(baseline: dict, current: dict, tolerance: float):
     # substring matching would let sharded_tree_matches_brute satisfy the
     # tree_matches_brute requirement
     leaves = {name.rsplit("/", 1)[-1] for name in cur}
-    required = REQUIRED_EXACTNESS
-    if not current.get("quick"):
-        required = required + REQUIRED_EXACTNESS_FULL
+    if latency:
+        required = REQUIRED_EXACTNESS_LATENCY
+    else:
+        required = REQUIRED_EXACTNESS
+        if not current.get("quick"):
+            required = required + REQUIRED_EXACTNESS_FULL
     for tag in required:
         if tag not in leaves:
             errors.append(f"required exactness row {tag} missing from the "
@@ -129,10 +189,14 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.05,
                     help="allowed one-sided drift for prune/computed "
                          "fractions (default: 0.05)")
+    ap.add_argument("--ratio-tolerance", type=float, default=0.35,
+                    help="allowed multiplicative drop for latency speedup "
+                         "ratios (default: 0.35 — CI-runner medians "
+                         "wobble more than pruning fractions)")
     args = ap.parse_args(argv)
 
     errors, notices = compare(_load(args.baseline), _load(args.current),
-                              args.tolerance)
+                              args.tolerance, args.ratio_tolerance)
     for n in notices:
         print(f"note: {n}")
     for e in errors:
