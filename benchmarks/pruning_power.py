@@ -153,6 +153,30 @@ def run(k: int = 10, n_queries: int = 32, *, quick: bool = False):
                      _matches_brute(s_scan, db, q, k),
                      "exactness gate: must be 1.0"))
 
+        # multi-pivot joint-bound intersection (DESIGN.md §3.8): the
+        # uniform/high-d regime, where Eq. 13 intervals concentrate toward
+        # the full pivot-similarity spread and prune nothing, is exactly
+        # where intersecting the joint k-pivot projection cap still bites.
+        # The index is rebuilt at the coverage suggestion so the bound
+        # table is wide enough, and the knob is explicit: the time-tuned
+        # default stays 0 on compute-and-mask CPU, where the cap matmul
+        # costs flops it cannot skip (tools/tune_defaults.py measures
+        # this; the row reports what a lazy evaluator would avoid).
+        from repro.core.pivots import suggest_bound_pivots
+        npv = suggest_bound_pivots(len(db), db.shape[1])
+        midx = build_index(jnp.asarray(db), n_pivots=npv, block_size=64)
+        meng = SearchEngine(midx, backend="scan", n_pivots=npv)
+        s_mp, _, st_mp = meng.search(qj, k)
+        rows.append((f"pruning/{regime}/block_prune_frac_multipivot",
+                     st_mp.block_prune_frac,
+                     "scan with the joint multi-pivot cap intersected"))
+        rows.append((f"pruning/{regime}/multipivot_n_pivots",
+                     float(st_mp.n_pivots),
+                     "joint-bound depth the engine resolved (explicit)"))
+        rows.append((f"pruning/{regime}/multipivot_matches_brute",
+                     _matches_brute(s_mp, db, q, k),
+                     "exactness gate: must be 1.0"))
+
         # pivot tree: transitive Eq. 13 descent, flat scan leaf stage
         treng = SearchEngine(idx, backend="tree", leaf_eval="scan")
         s_tree, _, st_t = treng.search(qj, k)

@@ -43,6 +43,12 @@ __all__ = [
     "pivot_lower_bound",
     "pivot_upper_bound",
     "LOWER_BOUNDS",
+    "JOINT_SLACK",
+    "ub_joint",
+    "joint_row_upper_bound",
+    "BOUND_PROVIDERS",
+    "register_bound_provider",
+    "block_upper_provider",
 ]
 
 
@@ -169,3 +175,112 @@ LOWER_BOUNDS = {
     "mult_lb1": lb_mult_fast1,    # Eq. 11
     "mult_lb2": lb_mult_fast2,    # Eq. 12
 }
+
+
+# ---------------------------------------------------------------------------
+# Joint multi-pivot (simplex / projection) upper bound.
+#
+# With an orthonormalized pivot basis U (see
+# :func:`repro.core.pivots.orthonormal_pivot_basis`), the coordinates
+# alpha = U q and beta = U y of two unit vectors satisfy
+#
+#     sim(q, y) <= <alpha, beta> + sqrt((1 - |alpha|^2)(1 - |beta|^2))
+#
+# because the residuals of q and y orthogonal to span(U) have norms
+# sqrt(1 - |alpha|^2) and sqrt(1 - |beta|^2) and can at best be parallel.
+# At one pivot this IS Eq. 13; at P = d it degenerates to the exact score.
+# Validity for duplicate / dependent pivots is by the jittered-lift
+# argument recorded in DESIGN.md §3.8.
+# ---------------------------------------------------------------------------
+
+#: Additive guard for float32 accumulation in the joint bound's dot
+#: products.  The paper's single-pivot bounds need no slack (their clamped
+#: radicands only remove NaN), but the joint bound sums up to d products,
+#: so a few ulps of headroom keep it a true upper bound in fp32.
+JOINT_SLACK = 3e-5
+
+
+def ub_joint(t: Array, a_nsq: Array, b_nsq: Array) -> Array:
+    """Joint projection upper bound from precomputed pieces.
+
+    Args:
+      t: ``<alpha, beta>`` inner products of pivot-basis coordinates.
+      a_nsq: ``|alpha|^2`` (must already be clamped to ``<= 1``).
+      b_nsq: ``|beta|^2`` (likewise).
+    """
+    rad = jnp.maximum(0.0, 1.0 - a_nsq) * jnp.maximum(0.0, 1.0 - b_nsq)
+    return t + jnp.sqrt(rad)
+
+
+def joint_row_upper_bound(
+    alpha: Array, beta: Array, beta_nsq: Array, *, slack: float = JOINT_SLACK
+) -> Array:
+    """Per-(query, row) joint bound table.
+
+    Args:
+      alpha: [M, J] query coordinates in the pivot basis.
+      beta:  [N, J] database-row coordinates.
+      beta_nsq: [N] precomputed ``|beta|^2`` at this prefix depth.
+
+    Returns [M, N] float32 upper bounds on ``sim(q_m, y_n)``.
+    """
+    t = alpha @ beta.T
+    a_nsq = jnp.minimum(jnp.sum(alpha * alpha, axis=-1), 1.0)
+    b_nsq = jnp.minimum(beta_nsq, 1.0)
+    return ub_joint(t, a_nsq[:, None], b_nsq[None, :]) + slack
+
+
+# ---------------------------------------------------------------------------
+# Bound-provider contract.
+#
+# A provider maps (index, qn, qp, n_pivots) -> [M, NB] per-block upper
+# bounds.  ``eq13`` is the classic single-formula interval bound (already
+# intersected over the index's pivot-similarity intervals); ``eq13_multi``
+# additionally intersects the joint n_pivots-deep projection cap — the min
+# of valid upper bounds is a valid upper bound, so validity is inherited
+# pointwise.  The registry keeps the family pluggable (e.g. a future
+# Ptolemaic instance) without the engine knowing any formula.
+# ---------------------------------------------------------------------------
+
+#: name -> provider(index, qn, qp, n_pivots) -> [M, NB] block upper bounds.
+BOUND_PROVIDERS: dict = {}
+
+
+def register_bound_provider(name: str):
+    """Decorator: register a block upper-bound provider under ``name``."""
+
+    def deco(fn):
+        BOUND_PROVIDERS[name] = fn
+        return fn
+
+    return deco
+
+
+def block_upper_provider(name: str):
+    """Look up a registered bound provider (KeyError lists known names)."""
+    try:
+        return BOUND_PROVIDERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown bound provider {name!r}; known: {sorted(BOUND_PROVIDERS)}"
+        ) from None
+
+
+@register_bound_provider("eq13")
+def _eq13_provider(index, qn: Array, qp: Array, n_pivots: int = 0) -> Array:
+    """Interval Eq. 13 bound, intersected over the index's pivots."""
+    from repro.kernels import ref as kref  # local: keep core import-light
+
+    return kref.block_bounds(qp, index.dp_min, index.dp_max)
+
+
+@register_bound_provider("eq13_multi")
+def _eq13_multi_provider(index, qn: Array, qp: Array, n_pivots: int) -> Array:
+    """Eq. 13 intervals intersected with the joint n_pivots projection cap."""
+    from repro.core.index import multipivot_block_cap  # local: avoid cycle
+    from repro.kernels import ref as kref
+
+    base = kref.block_bounds(qp, index.dp_min, index.dp_max)
+    if n_pivots <= 0 or index.ortho is None:
+        return base
+    return jnp.minimum(base, multipivot_block_cap(index, qn, n_pivots=n_pivots))

@@ -221,7 +221,8 @@ def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names,
                          warm_start_blocks: int | None = None,
                          element_stats: bool = False,
                          with_stats: bool = False,
-                         tree=None, margin: float = 4e-7):
+                         tree=None, margin: float = 4e-7,
+                         n_pivots: int = 0):
     """Body that runs inside ``shard_map``: local scan + global merge.
 
     ``index`` arrives with the leading shard axis of size 1 (this device's
@@ -253,7 +254,8 @@ def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names,
         sims, pos, blk_pruned, elem_pruned = scan_search(
             local, qn, qp, k, prune=prune, margin=margin,
             warm_start=warm_start, best_first=best_first,
-            warm_start_blocks=warm_start_blocks, element_stats=element_stats)
+            warm_start_blocks=warm_start_blocks, element_stats=element_stats,
+            n_pivots=n_pivots)
         tree_pruned = evals = None
     else:
         # the descent is pure masking work with prune off — the backend
@@ -271,6 +273,13 @@ def sharded_search_local(index: BlockIndex, queries: Array, k: int, axis_names,
             ltree, qn, qp, k, warm_start=warm_start,
             warm_start_blocks=warm_start_blocks, margin=margin,
             tau_merge=lambda s, v: global_tau_merge(s, v, k, axis_names))
+        if n_pivots > 0:
+            # eq13_multi over the LOCAL shard tables (pivots — and so the
+            # joint basis — were always shard-local); the leaf scan below
+            # consumes the tightened bound matrix unchanged
+            from repro.core.index import multipivot_block_cap
+            leaf_ub = jnp.minimum(
+                leaf_ub, multipivot_block_cap(local, qn, n_pivots=n_pivots))
         sims, pos, blk_pruned, elem_pruned = scan_search(
             local, qn, qp, k, margin=margin, warm_start=False,
             best_first=best_first, element_stats=element_stats,
@@ -306,6 +315,7 @@ def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None,
                         element_stats: bool = False,
                         with_stats: bool = False,
                         margin: float = 4e-7,
+                        n_pivots: int = 0,
                         trace_hook=None):
     """Build a jitted ``(index, queries, k[, tree]) -> (sims, gids)`` closure.
 
@@ -339,7 +349,7 @@ def make_sharded_search(mesh: Mesh, axis_names: tuple[str, ...] | None = None,
             warm_start=warm_start, best_first=best_first,
             warm_start_blocks=warm_start_blocks,
             element_stats=element_stats, with_stats=with_stats,
-            margin=margin)
+            margin=margin, n_pivots=n_pivots)
         n_stats = (6 if tree is not None else 4) if with_stats else 2
         idx_specs = jax.tree.map(lambda _: P(axis_names), index)
         if tree is None:

@@ -37,11 +37,13 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core.bounds import ub_mult
-from repro.core.pivots import normalize, select_pivots_maxmin, select_pivots_random
+from repro.core.bounds import joint_row_upper_bound, ub_mult
+from repro.core.pivots import (normalize, orthonormal_pivot_basis,
+                               select_pivots_maxmin, select_pivots_random)
 
 __all__ = ["BlockIndex", "build_index", "search", "search_brute",
-           "interval_upper_bound", "block_upper_bound", "reorder_perm"]
+           "interval_upper_bound", "block_upper_bound", "reorder_perm",
+           "multipivot_block_cap"]
 
 
 class BlockIndex(NamedTuple):
@@ -59,6 +61,13 @@ class BlockIndex(NamedTuple):
     dp_max: Array    # [n_blocks, P]
     valid: Array     # [n_pad]     bool, False on padding rows
     row_ids: Array   # [n_pad]     original row id of each (possibly reordered) row
+    # Joint multi-pivot bound tables (None on indexes built before PR 7; every
+    # field defaults so old pytree shapes keep unflattening).  ``ortho`` is the
+    # orthonormalized pivot basis U = R^-1 Z; beta = db @ U.T; beta_nsq the
+    # cumulative squared prefix norms, so one table serves every n_pivots <= P.
+    ortho: Array | None = None     # [P, d]
+    beta: Array | None = None      # [n_pad, P]
+    beta_nsq: Array | None = None  # [n_pad, P]  cumsum(beta**2, axis=1)
 
     @property
     def n_blocks(self) -> int:
@@ -71,6 +80,11 @@ class BlockIndex(NamedTuple):
     @property
     def n_pivots(self) -> int:
         return self.pivots.shape[0]
+
+    @property
+    def bound_table_width(self) -> int:
+        """Max usable ``n_pivots`` for the joint bound (0 = no table)."""
+        return 0 if self.ortho is None else self.ortho.shape[-2]
 
 
 def build_index(
@@ -95,6 +109,9 @@ def build_index(
     """
     dbn = normalize(jnp.asarray(db, jnp.float32))
     n, d = dbn.shape
+    # More pivots than points is degenerate-but-reachable (tiny corpora /
+    # shards): clamp so selection and the joint-bound tables stay defined.
+    n_pivots = max(1, min(int(n_pivots), n))
     n_pad = -(-n // block_size) * block_size
     pad = n_pad - n
     dbn = jnp.pad(dbn, ((0, pad), (0, 0)))
@@ -129,7 +146,20 @@ def build_index(
     empty = ~jnp.isfinite(dp_min)
     dp_min = jnp.where(empty, 0.0, dp_min)
     dp_max = jnp.where(empty, 0.0, dp_max)
-    return BlockIndex(dbn, dp, pivots, dp_min, dp_max, valid, row_ids)
+
+    # Joint multi-pivot bound tables (float64 at build, float32 stored).
+    # Computed on the *reordered* rows so beta[i] matches db[i]; maxmin
+    # selection is nested, so prefix slices of these tables are exactly the
+    # tables a shallower index would have built.
+    import numpy as np
+    u64 = orthonormal_pivot_basis(pivots)                   # [P, d] f64
+    beta64 = np.asarray(dbn, np.float64) @ u64.T            # [n_pad, P]
+    beta_nsq64 = np.cumsum(beta64 * beta64, axis=1)
+    ortho = jnp.asarray(u64, jnp.float32)
+    beta = jnp.asarray(beta64, jnp.float32)
+    beta_nsq = jnp.asarray(beta_nsq64, jnp.float32)
+    return BlockIndex(dbn, dp, pivots, dp_min, dp_max, valid, row_ids,
+                      ortho, beta, beta_nsq)
 
 
 def reorder_perm(dp: Array, valid: Array, n_pivots: int) -> Array:
@@ -170,6 +200,37 @@ def block_upper_bound(qp: Array, dp_min: Array, dp_max: Array) -> Array:
     """
     per_pivot = interval_upper_bound(qp, dp_min[None, :], dp_max[None, :])
     return per_pivot.min(axis=-1)
+
+
+def multipivot_block_cap(index: BlockIndex, qn: Array, *, n_pivots: int) -> Array:
+    """Per-(query, block) joint multi-pivot upper bound ("cap").
+
+    Projects the queries onto the first ``n_pivots`` rows of the index's
+    orthonormalized pivot basis and takes, per block, the max of the joint
+    row bound over the block's valid rows — a valid block bound because the
+    max over members dominates each member (same argument as the interval
+    bound).  Shrinks monotonically as ``n_pivots`` grows; at ``n_pivots = d``
+    it equals the exact block max score.
+
+    Args:
+      index: a :class:`BlockIndex` with joint tables (``ortho is not None``).
+      qn: [M, d] normalized queries.
+      n_pivots: prefix depth ``1 <= n_pivots <= index.bound_table_width``.
+
+    Returns [M, n_blocks] float32.
+    """
+    if index.ortho is None:
+        raise ValueError("index has no joint bound tables (ortho is None)")
+    j = int(n_pivots)
+    if not 1 <= j <= index.bound_table_width:
+        raise ValueError(
+            f"n_pivots={j} outside [1, {index.bound_table_width}]")
+    alpha = qn.astype(jnp.float32) @ index.ortho[:j].T          # [M, j]
+    row_ub = joint_row_upper_bound(
+        alpha, index.beta[:, :j], index.beta_nsq[:, j - 1])     # [M, n_pad]
+    row_ub = jnp.where(index.valid[None, :], row_ub, -jnp.inf)
+    m = row_ub.shape[0]
+    return row_ub.reshape(m, index.n_blocks, -1).max(axis=-1)
 
 
 def search(

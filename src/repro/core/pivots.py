@@ -54,6 +54,65 @@ def select_pivots_maxmin(db: Array, n_pivots: int, *, first: int = 0) -> Array:
 
 
 def select_pivots_random(n: int, n_pivots: int, seed: int = 0) -> Array:
-    """Uniform random pivot indices (cheap baseline)."""
+    """Uniform random pivot indices (cheap baseline).
+
+    ``n_pivots`` is clamped to ``n``: asking for more pivots than points is
+    a degenerate-but-reachable configuration (tiny shards route here, see
+    ``repro.core.distributed``), and ``choice(replace=False)`` would raise.
+    """
     rng = np.random.default_rng(seed)
+    n_pivots = max(1, min(n_pivots, n))
     return jnp.asarray(rng.choice(n, size=n_pivots, replace=False).astype(np.int32))
+
+
+def suggest_bound_pivots(n: int, d: int) -> int:
+    """Pivot-table depth for the joint ``eq13_multi`` bound (see
+    :mod:`repro.core.bounds`).
+
+    ``d`` pivots span the whole space — the joint projection bound then
+    *equals* the exact score (it prunes perfectly but costs a full matmul to
+    evaluate), while shallow tables lose all power on uniform high-d data
+    (the per-pivot residuals stay near 1).  ``7d/8`` keeps a usable
+    orthogonal remainder and is where the uniform-regime block pruning
+    plateaus on the pruning bench; clamped to ``n - 1`` so tiny corpora
+    stay non-degenerate.
+    """
+    return max(1, min(7 * d // 8, max(1, n - 1)))
+
+
+def orthonormal_pivot_basis(pivots, jitter: float = 1e-6) -> np.ndarray:
+    """Orthonormalized pivot basis ``U = R^{-1} Z`` for the joint bound.
+
+    ``Z`` [P, d] are the (unit) pivot rows, ``G = Z Z^T`` their Gram, and
+    ``R`` the lower Cholesky factor of ``G + jitter*I``.  The rows of ``U``
+    are the first ``P`` vectors of a Gram–Schmidt basis of the *lifted*
+    pivots ``z~_i = (z_i, sqrt(jitter)*e_i)`` (whose Gram is exactly
+    ``G + jitter*I``), so for any unit ``x`` the coordinate vector
+    ``alpha = U @ x`` satisfies ``|alpha| <= 1`` and the joint upper bound
+    of :func:`repro.core.bounds.ub_joint` is valid — including for
+    duplicate or linearly dependent pivots, where the jitter keeps the
+    factorization defined (DESIGN.md §3.8).
+
+    Because ``R`` is lower triangular and the maxmin selection is nested
+    (greedy), the first ``k`` rows of ``U`` are exactly the basis that a
+    ``k``-pivot table would have built: one full-width table serves every
+    prefix ``n_pivots <= P``.
+
+    Host-side float64 numpy (build-time only); escalates the jitter ×10
+    until the factorization succeeds.
+    """
+    z = np.asarray(pivots, np.float64)
+    p = z.shape[0]
+    gram = z @ z.T
+    eps = float(jitter)
+    for _ in range(24):
+        try:
+            chol = np.linalg.cholesky(gram + eps * np.eye(p))
+            break
+        except np.linalg.LinAlgError:
+            eps *= 10.0
+    else:  # pragma: no cover - float64 PSD + jitter cannot get here
+        raise np.linalg.LinAlgError("pivot Gram not factorizable")
+    from scipy.linalg import solve_triangular
+
+    return solve_triangular(chol, z, lower=True)

@@ -26,6 +26,17 @@ DEFAULT_BB = 256
 
 
 def _kernel(qp_ref, lo_ref, hi_ref, out_ref):
+    out_ref[...] = _interval_ub(qp_ref, lo_ref, hi_ref)
+
+
+def _kernel_cap(qp_ref, lo_ref, hi_ref, cap_ref, out_ref):
+    # extra pivot-similarity operand: intersect the precomputed joint
+    # multi-pivot cap tile — min of valid upper bounds stays valid
+    out_ref[...] = jnp.minimum(_interval_ub(qp_ref, lo_ref, hi_ref),
+                               cap_ref[...].astype(jnp.float32))
+
+
+def _interval_ub(qp_ref, lo_ref, hi_ref):
     qp = qp_ref[...].astype(jnp.float32)          # [BM, P]
     lo = lo_ref[...].astype(jnp.float32)          # [BB, P]
     hi = hi_ref[...].astype(jnp.float32)
@@ -36,7 +47,7 @@ def _kernel(qp_ref, lo_ref, hi_ref, out_ref):
     ub_l = a * l + jnp.sqrt(rad_a * jnp.maximum(0.0, 1.0 - l * l))
     ub_h = a * h + jnp.sqrt(rad_a * jnp.maximum(0.0, 1.0 - h * h))
     per_pivot = jnp.where((a >= l) & (a <= h), 1.0, jnp.maximum(ub_l, ub_h))
-    out_ref[...] = per_pivot.min(axis=-1)         # [BM, BB]
+    return per_pivot.min(axis=-1)                 # [BM, BB]
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bb", "interpret"))
@@ -44,6 +55,7 @@ def block_bounds(
     qp: Array,
     dp_min: Array,
     dp_max: Array,
+    ub_cap: Array | None = None,
     *,
     bm: int = DEFAULT_BM,
     bb: int = DEFAULT_BB,
@@ -53,6 +65,11 @@ def block_bounds(
 
     M and NB are padded internally to tile multiples; P stays whole (pivot
     counts are small, 8–64, and live in the minor-most VMEM lane dim).
+
+    ``ub_cap`` [M, NB] (optional) is an extra per-(query, block) upper
+    bound — the joint multi-pivot cap of DESIGN.md §3.8 — intersected with
+    the interval bound inside the kernel (tightest wins; validity is the
+    caller's obligation).
     """
     m, p = qp.shape
     nb = dp_min.shape[0]
@@ -64,16 +81,27 @@ def block_bounds(
     # ub <= ... values unused (sliced off below); any finite pad is fine.
     lo_p = jnp.pad(dp_min, ((0, nbp - nb), (0, 0)), constant_values=0.0)
     hi_p = jnp.pad(dp_max, ((0, nbp - nb), (0, 0)), constant_values=0.0)
+    in_specs = [
+        pl.BlockSpec((bm_, p), lambda i, j: (i, 0)),
+        pl.BlockSpec((bb_, p), lambda i, j: (j, 0)),
+        pl.BlockSpec((bb_, p), lambda i, j: (j, 0)),
+    ]
+    operands = [qp_p, lo_p, hi_p]
+    kern = _kernel
+    if ub_cap is not None:
+        assert ub_cap.shape == (m, nb), (ub_cap.shape, m, nb)
+        # padded cells are sliced off below; any finite pad is fine
+        cap_p = jnp.pad(ub_cap.astype(jnp.float32),
+                        ((0, mp - m), (0, nbp - nb)))
+        in_specs.append(pl.BlockSpec((bm_, bb_), lambda i, j: (i, j)))
+        operands.append(cap_p)
+        kern = _kernel_cap
     out = pl.pallas_call(
-        _kernel,
+        kern,
         grid=(mp // bm_, nbp // bb_),
-        in_specs=[
-            pl.BlockSpec((bm_, p), lambda i, j: (i, 0)),
-            pl.BlockSpec((bb_, p), lambda i, j: (j, 0)),
-            pl.BlockSpec((bb_, p), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm_, bb_), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, nbp), jnp.float32),
         interpret=interpret,
-    )(qp_p, lo_p, hi_p)
+    )(*operands)
     return out[:m, :nb]

@@ -40,9 +40,11 @@ _NEG_INF = float("-inf")
 
 
 def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool,
-                 element_stats: bool):
+                 element_stats: bool, use_cap: bool = False):
     def kernel(order_ref, nvalid_ref, tau_ref, qn_ref, db_ref, qp_ref,
                lo_ref, hi_ref, *rest):
+        if use_cap:
+            cap_ref, rest = rest[0], rest[1:]
         if element_stats:
             dp_ref, top_s_out, top_i_out, computed_ref, elem_ref = rest[:5]
             top_s, top_i = rest[5:]
@@ -76,6 +78,11 @@ def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool,
         ub_h = qp * hi + jnp.sqrt(rad_q * jnp.maximum(0.0, 1.0 - hi * hi))
         per_p = jnp.where((qp >= lo) & (qp <= hi), 1.0, jnp.maximum(ub_l, ub_h))
         ub = per_p.min(axis=-1)                           # [BM]
+        if use_cap:
+            # extra pivot-similarity operand: the precomputed joint
+            # multi-pivot cap for this (query row, visited tile) — min of
+            # valid upper bounds is a valid upper bound (DESIGN.md §3.8)
+            ub = jnp.minimum(ub, cap_ref[...][:, 0])
 
         tau = top_s[:, k - 1]                             # running kth best
         row = i * bm + jax.lax.broadcasted_iota(jnp.int32, (qp.shape[0], 1), 0)[:, 0]
@@ -158,6 +165,7 @@ def pruned_topk(
     tau_init: Array | None = None,
     block_order: Array | None = None,
     dp: Array | None = None,
+    ub_cap: Array | None = None,
     *,
     k: int,
     bm: int = DEFAULT_BM,
@@ -187,6 +195,11 @@ def pruned_topk(
                Identity order when None.
       dp:      [N, P] per-row pivot similarities; required when
                ``element_stats`` (the per-element Eq. 13 bound needs them).
+      ub_cap:  [M, N_tiles] optional extra per-(query, db tile) upper
+               bounds (the joint multi-pivot cap, DESIGN.md §3.8),
+               min'd into the interval bound inside the kernel before the
+               skip test.  Must be valid upper bounds on every score in
+               the tile; exactness is the caller's obligation.
       k:       top-k (k <= bn).
       element_stats: also count, per visited tile, the (query, row) pairs
                whose individual Eq. 13 bound is below the running τ — the
@@ -226,7 +239,9 @@ def pruned_topk(
             jnp.arange(grid[1], dtype=jnp.int32)[None, :], grid)
     block_order = block_order.astype(jnp.int32)
     assert block_order.shape == grid, (block_order.shape, grid)
-    kern = _make_kernel(k, bm, bn, margin, prune, element_stats)
+    use_cap = ub_cap is not None
+    kern = _make_kernel(k, bm, bn, margin, prune, element_stats,
+                        use_cap=use_cap)
     out_shape = [
         jax.ShapeDtypeStruct((mp, k), jnp.float32),
         jax.ShapeDtypeStruct((mp, k), jnp.int32),
@@ -248,6 +263,14 @@ def pruned_topk(
         pl.BlockSpec((1, 1), lambda i, j, ord_: (i, ord_[i, j])),
     ]
     operands = [block_order, nv, tau, qn_p, db, qp_p, dp_min, dp_max]
+    if use_cap:
+        assert ub_cap.shape == (m, grid[1]), (ub_cap.shape, m, grid)
+        # padded query rows carry cap 0: their ub shrinks, but the prune
+        # predicate already masks them out via m_valid / `live`
+        cap_p = jnp.pad(ub_cap.astype(jnp.float32), ((0, mp - m), (0, 0)))
+        in_specs.append(
+            pl.BlockSpec((bm, 1), lambda i, j, ord_: (i, ord_[i, j])))
+        operands.append(cap_p)
     if element_stats:
         in_specs.append(
             pl.BlockSpec((bn, p), lambda i, j, ord_: (ord_[i, j], 0)))  # dp

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.bounds import ub_mult
-from repro.core.index import BlockIndex, block_upper_bound
+from repro.core.index import (BlockIndex, block_upper_bound,
+                              multipivot_block_cap)
 from repro.core.pivots import normalize
 from repro.kernels import cosine_topk
 from repro.kernels import ref as kref
@@ -171,7 +172,7 @@ def best_first_order(ub: Array) -> Array:
 @functools.partial(
     jax.jit,
     static_argnames=("k", "prune", "warm_start", "best_first", "element_stats",
-                     "warm_start_blocks"),
+                     "warm_start_blocks", "n_pivots"),
 )
 def scan_search(
     index: BlockIndex,
@@ -185,6 +186,7 @@ def scan_search(
     best_first: bool = False,
     element_stats: bool = False,
     warm_start_blocks: int | None = None,
+    n_pivots: int = 0,
     tau0: Array | None = None,
     ub_all: Array | None = None,
     leaf_mask: Array | None = None,
@@ -198,7 +200,10 @@ def scan_search(
     engine.  Pruned matmuls are computed-and-masked (XLA has no
     data-dependent skip); the kernel backend actually skips them.
     ``warm_start_blocks`` widens the τ prescan beyond the ``ceil(k / bs)``
-    floor (DESIGN.md §3.4).
+    floor (DESIGN.md §3.4).  ``n_pivots`` > 0 intersects the joint
+    multi-pivot projection cap into the block bound matrix before the
+    scan (the ``eq13_multi`` provider, DESIGN.md §3.8) — it tightens the
+    warm-start seed, the best-first order, and the per-block prune test.
 
     The three optional arrays let a hierarchical caller (the ``tree``
     backend, DESIGN.md §3.5) reuse this loop as its leaf stage: ``tau0``
@@ -225,8 +230,14 @@ def scan_search(
     base_idx = (jnp.arange(nb)[:, None] * bs
                 + jnp.arange(bs)[None, :]).astype(jnp.int32)
 
-    if ub_all is None and (warm_start or best_first):
+    if ub_all is None and (warm_start or best_first
+                           or (prune and n_pivots > 0)):
         ub_all = kref.block_bounds(qp, index.dp_min, index.dp_max)  # [m, nb]
+    if prune and n_pivots > 0:
+        # eq13_multi: intersect the joint n_pivots-deep projection cap —
+        # min of valid upper bounds is a valid upper bound (DESIGN.md §3.8)
+        ub_all = jnp.minimum(
+            ub_all, multipivot_block_cap(index, qn, n_pivots=n_pivots))
 
     if tau0 is None:
         tau0 = jnp.full((m,), -jnp.inf, jnp.float32)
@@ -324,7 +335,7 @@ def _resolve_bn(index: BlockIndex, bn: int | None) -> int:
     jax.jit,
     static_argnames=("k", "bm", "bn", "prune", "sort_queries", "warm_start",
                      "best_first", "margin", "interpret", "element_stats",
-                     "warm_start_blocks"),
+                     "warm_start_blocks", "n_pivots"),
 )
 def kernel_search(
     index: BlockIndex,
@@ -342,6 +353,7 @@ def kernel_search(
     interpret: bool | None = None,
     element_stats: bool = False,
     warm_start_blocks: int | None = None,
+    n_pivots: int = 0,
 ):
     """Fused Pallas backend (see :mod:`repro.kernels.cosine_topk`).
 
@@ -356,7 +368,10 @@ def kernel_search(
     (scalar-prefetched index map).  ``warm_start_blocks`` widens the τ
     prescan beyond ``ceil(k / bn)`` kernel tiles (DESIGN.md §3.4); the
     prescan granularity here is the *kernel tile* (bn rows), not the index
-    block.
+    block.  ``n_pivots`` > 0 computes the joint multi-pivot cap at index
+    block granularity, coarsens it to kernel tiles (max over merged
+    blocks — still a valid tile bound), and hands it to the kernel as the
+    extra per-(query-tile, db-tile) bound operand.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -369,9 +384,15 @@ def kernel_search(
         qn, qp = qn[perm], qp[perm]
     n_valid = index.valid.sum().astype(jnp.int32)
 
+    ub_cap = None
+    if prune and n_pivots > 0:
+        cap = multipivot_block_cap(index, qn, n_pivots=n_pivots)  # [m, nb]
+        ub_cap = cap.reshape(m, lo.shape[0], -1).max(axis=-1)     # [m, nt]
     ub = None
     if warm_start or best_first:
         ub = kref.block_bounds(qp, lo, hi)                    # [m, n_tiles]
+        if ub_cap is not None:
+            ub = jnp.minimum(ub, ub_cap)
     tau_init = None
     if warm_start:
         db_tiles = index.db.reshape(-1, bn, index.db.shape[-1])
@@ -389,7 +410,7 @@ def kernel_search(
     sims, pos, computed, elem = cosine_topk.pruned_topk(
         qn, index.db, qp, lo, hi, n_valid,
         tau_init=tau_init, block_order=block_order,
-        dp=index.dp if element_stats else None,
+        dp=index.dp if element_stats else None, ub_cap=ub_cap,
         k=k, bm=bm, bn=bn, margin=margin, prune=prune, interpret=interpret,
         element_stats=element_stats,
     )
@@ -441,7 +462,8 @@ class ScanBackend:
             eng.index, qn, qp, k, prune=prune, margin=eng.margin,
             warm_start=eng.warm_start, best_first=eng.best_first,
             element_stats=element_stats,
-            warm_start_blocks=eng.warm_start_blocks)
+            warm_start_blocks=eng.warm_start_blocks,
+            n_pivots=eng.n_pivots)
         ids = map_row_ids(eng.index.row_ids, pos)
         m, nb = qn.shape[0], eng.index.n_blocks
         # raw stats stay jnp scalars: engine.search converts to host floats
@@ -461,6 +483,7 @@ class ScanBackend:
         note = eng._note_trace
         margin, warm_start = eng.margin, eng.warm_start
         best_first, wsb = eng.best_first, eng.warm_start_blocks
+        n_piv = eng.n_pivots
         n_valid = max(1, eng.n_valid)
 
         def body(index, queries, scratch=None):
@@ -470,7 +493,7 @@ class ScanBackend:
                 index, qn, qp, k, prune=prune, margin=margin,
                 warm_start=warm_start, best_first=best_first,
                 element_stats=element_stats, warm_start_blocks=wsb,
-                db_scratch=scratch)
+                n_pivots=n_piv, db_scratch=scratch)
             s, pos, blk_pruned, elem_pruned = out[:4]
             ids = map_row_ids(index.row_ids, pos)
             m, nb = qn.shape[0], index.n_blocks
@@ -499,7 +522,8 @@ class KernelBackend:
             sort_queries=eng.sort_queries, warm_start=eng.warm_start,
             best_first=eng.best_first, margin=eng.margin,
             interpret=eng.interpret, element_stats=element_stats,
-            warm_start_blocks=eng.warm_start_blocks)
+            warm_start_blocks=eng.warm_start_blocks,
+            n_pivots=eng.n_pivots)
         ids = map_row_ids(eng.index.row_ids, pos)
         frac = computed.mean()
         raw = {"block_prune_frac": 1.0 - frac, "tile_computed_frac": frac}
@@ -516,6 +540,7 @@ class KernelBackend:
         warm_start, best_first = eng.warm_start, eng.best_first
         margin, interpret, wsb = eng.margin, eng.interpret, \
             eng.warm_start_blocks
+        n_piv = eng.n_pivots
         n_valid = max(1, eng.n_valid)
 
         @jax.jit
@@ -526,7 +551,8 @@ class KernelBackend:
                 index, qn, qp, k, bm=bm, bn=bn, prune=prune,
                 sort_queries=sq, warm_start=warm_start,
                 best_first=best_first, margin=margin, interpret=interpret,
-                element_stats=element_stats, warm_start_blocks=wsb)
+                element_stats=element_stats, warm_start_blocks=wsb,
+                n_pivots=n_piv)
             ids = map_row_ids(index.row_ids, pos)
             frac = computed.mean()
             raw = {"block_prune_frac": 1.0 - frac,
@@ -633,7 +659,7 @@ class ShardedBackend:
         # the descent is pure masking work with prune off: fall back to the
         # flat per-shard scan, which honors prune=False like every backend
         use_tree = eng._tree_shards_enabled and prune
-        key = (element_stats, use_tree, prune)
+        key = (element_stats, use_tree, prune, eng.n_pivots)
         fn = eng._sharded_fn.get(key)
         if fn is None:
             from repro.core.distributed import make_sharded_search
@@ -642,6 +668,7 @@ class ShardedBackend:
                 warm_start=eng.warm_start, best_first=eng.best_first,
                 warm_start_blocks=eng.warm_start_blocks,
                 element_stats=element_stats, margin=eng.margin,
+                n_pivots=eng.n_pivots,
                 trace_hook=eng._note_trace)
             eng._sharded_fn[key] = fn
         q = self._replicated_queries(eng, queries)

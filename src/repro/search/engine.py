@@ -118,6 +118,16 @@ class SearchEngine:
         (default) auto-enables once each shard holds ≥ 256 blocks — the
         same depth at which the single-device tree backend wins.  Ignored
         by non-sharded backends (the ``tree`` backend always descends).
+      n_pivots: joint multi-pivot bound depth (DESIGN.md §3.8): before a
+        block is admitted, the ``eq13_multi`` provider intersects the
+        classic Eq. 13 interval bound with a joint projection bound over
+        the first ``n_pivots`` rows of the index's orthonormalized pivot
+        basis — tightest bound wins, validity is inherited pointwise.
+        ``0`` disables the extra cap (the single-formula fast path);
+        ``None`` (default) defers to the time-tuned per-regime table.
+        Clamped to the index's bound-table width.  Consumed by the scan,
+        kernel, tree and sharded backends; changing it re-keys the fused
+        dispatch cache (one retrace), like every other knob.
       margin: fp32 guard added to bounds before comparing with τ.
       leaf_eval: tree-backend leaf stage — ``"scan"`` (portable, traceable
         inside an outer jit), ``"kernel"`` (compact the surviving leaves
@@ -142,6 +152,7 @@ class SearchEngine:
         best_first: bool | None = None,
         element_stats: bool = False,
         tree_shards: bool | None = None,
+        n_pivots: int | None = None,
         margin: float = 4e-7,
         leaf_eval: str = "auto",
         bm: int = 128,
@@ -194,6 +205,13 @@ class SearchEngine:
             leaf_eval = (_defaults.tuned_default("leaf_eval", self.regime)
                          or "auto")
         self.leaf_eval = leaf_eval
+        # joint-bound depth: sentinel -> tuned table; always clamped to the
+        # index's table width (0 on pre-PR-7 indexes without the tables)
+        table_width = index.bound_table_width
+        if n_pivots is None:
+            n_pivots = int(_defaults.tuned_default("n_pivots", self.regime)
+                           or 0)
+        self.n_pivots = max(0, min(int(n_pivots), table_width))
         # a flat 2D index cannot serve the sharded backend: without this
         # check the shard_map body peels a "shard axis" off the real data
         # and dies mid-trace in an opaque reshape TypeError.  Supplying a
@@ -240,6 +258,7 @@ class SearchEngine:
         mesh=None,
         distributed: bool = False,
         global_rows: int | None = None,
+        bound_pivots: int | None = None,
         **engine_kw: Any,
     ) -> "SearchEngine":
         """Build the index and wrap it in an engine in one call.
@@ -247,6 +266,11 @@ class SearchEngine:
         Pass ``mesh`` (and optionally ``n_shards``, default one shard per
         mesh device) to build a sharded datastore served by the
         ``sharded`` backend.
+
+        ``n_pivots`` here is the *index* pivot count (interval tables and
+        joint-bound table width); ``bound_pivots`` is the engine's search
+        time ``n_pivots`` knob — the joint-bound depth actually
+        intersected per query (``None`` defers to the tuned table).
 
         ``distributed=True`` (multi-process jax; needs ``mesh``) switches
         to the process-local build: ``db`` is then only THIS host's slice
@@ -257,6 +281,8 @@ class SearchEngine:
         host materializes the full datastore; search works unchanged
         (DESIGN.md §3.7).
         """
+        if bound_pivots is not None:
+            engine_kw["n_pivots"] = bound_pivots
         if distributed:
             if mesh is None:
                 raise ValueError(
@@ -303,7 +329,7 @@ class SearchEngine:
     def _knob_key(self):
         return (self.warm_start, self.warm_start_blocks, self.best_first,
                 self.margin, self.leaf_eval, self.bm, self.bn,
-                self.sort_queries, self.interpret)
+                self.sort_queries, self.interpret, self.n_pivots)
 
     def _fused_callable(self, queries, kk: int, prune: bool,
                         element_stats: bool):
@@ -405,6 +431,8 @@ class SearchEngine:
             tree_node_eval_frac=raw.get("tree_node_eval_frac"),
             warm_start=self.warm_start,
             best_first=self.best_first,
+            n_pivots=(None if self.backend_name == "brute"
+                      else self.n_pivots),
             retraces=retraces,
             extras={k_: v for k_, v in raw.items()
                     if k_ not in ("block_prune_frac", "tile_computed_frac",

@@ -65,6 +65,11 @@ class SearchStats:
     trace-time work: the outer trace's first pass re-traces the fused
     callee, later cached outer calls never re-enter Python at all.
 
+    ``n_pivots`` is the resolved joint-bound depth this engine searched
+    with (the ``eq13_multi`` intersection of DESIGN.md §3.8): 0 means the
+    single-formula ``eq13`` interval bound alone, ``None`` means the
+    backend does not consume the knob (brute force).
+
     **Absent-stage fields are ``None``, never 0.**  A stage that did not
     run (no tree built, element stats off, not the kernel) reports
     ``None``; ``0.0`` always means the stage ran and pruned/skipped
@@ -84,6 +89,7 @@ class SearchStats:
     tree_node_eval_frac: float | None = None
     warm_start: bool = False
     best_first: bool = False
+    n_pivots: int | None = None
     retraces: int | None = None
     extras: dict = field(default_factory=dict)
 

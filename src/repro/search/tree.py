@@ -46,7 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
-from repro.core.index import BlockIndex, interval_upper_bound
+from repro.core.index import (BlockIndex, interval_upper_bound,
+                              multipivot_block_cap)
 from repro.kernels import ref as kref
 from repro.search import backends as _bk
 
@@ -370,7 +371,7 @@ def _seed_and_descend(tree: TreeIndex, qn: Array, qp: Array, k: int, *,
 @functools.partial(
     jax.jit,
     static_argnames=("k", "prune", "warm_start", "best_first", "element_stats",
-                     "warm_start_blocks"),
+                     "warm_start_blocks", "n_pivots"),
 )
 def tree_search(
     tree: TreeIndex,
@@ -384,6 +385,7 @@ def tree_search(
     best_first: bool = True,
     element_stats: bool = False,
     warm_start_blocks: int | None = None,
+    n_pivots: int = 0,
 ):
     """Full tree search with the scan leaf stage, one jitted unit.
 
@@ -406,6 +408,13 @@ def tree_search(
         tau0, leaf_alive, leaf_ub, evals = _seed_and_descend(
             tree, qn, qp, k, warm_start=warm_start,
             warm_start_blocks=warm_start_blocks, margin=margin)
+        if n_pivots > 0:
+            # eq13_multi at the leaf level: tighten the descent's leaf
+            # bound matrix with the joint projection cap before the leaf
+            # scan consumes it.  The descent itself (and tree_prune_frac)
+            # stays interval-only — the caps are leaf-granular tables.
+            leaf_ub = jnp.minimum(
+                leaf_ub, multipivot_block_cap(idx, qn, n_pivots=n_pivots))
     else:
         tau0, leaf_alive, leaf_ub = None, None, None
         evals = jnp.zeros((), jnp.float32)
@@ -467,6 +476,7 @@ class TreeBackend:
         note = eng._note_trace
         margin, warm_start = eng.margin, eng.warm_start
         best_first, wsb = eng.best_first, eng.warm_start_blocks
+        n_piv = eng.n_pivots
         n_valid_rows = max(1, eng.n_valid)
         n_valid_nodes = max(1, eng._tree_valid_nodes)
 
@@ -479,7 +489,8 @@ class TreeBackend:
                 tree_search(
                     tree, qn, qp, k, prune=prune, margin=margin,
                     warm_start=warm_start, best_first=best_first,
-                    element_stats=element_stats, warm_start_blocks=wsb)
+                    element_stats=element_stats, warm_start_blocks=wsb,
+                    n_pivots=n_piv)
             ids = _bk.map_row_ids(index.row_ids, pos)
             raw = {
                 "block_prune_frac": blk_pruned / (m * nb),
@@ -508,7 +519,8 @@ class TreeBackend:
             tree, qn, qp, k, prune=prune, margin=eng.margin,
             warm_start=eng.warm_start, best_first=eng.best_first,
             element_stats=element_stats,
-            warm_start_blocks=eng.warm_start_blocks)
+            warm_start_blocks=eng.warm_start_blocks,
+            n_pivots=eng.n_pivots)
         ids = _bk.map_row_ids(eng.index.row_ids, pos)
         raw = {
             "block_prune_frac": blk_pruned / (m * nb),
@@ -534,6 +546,17 @@ class TreeBackend:
         tau0, leaf_alive, _, evals = _seed_and_descend(
             tree, qn, qp, k, warm_start=eng.warm_start,
             warm_start_blocks=eng.warm_start_blocks, margin=eng.margin)
+        # tree_prune_frac stays descent-only: snapshot before any cap
+        # refinement below changes the compaction mask
+        tree_pruned = (~leaf_alive).sum().astype(jnp.float32)
+        if eng.n_pivots > 0 and tau0 is not None and not element_stats:
+            # eq13_multi refinement of the compaction: leaves whose joint
+            # cap cannot reach the τ seed never enter the kernel grid.
+            # Skipped under element_stats — that statistic's non-kept-block
+            # accounting relies on every compacted-away row being provably
+            # under its *interval* bound, which the cap does not imply.
+            cap = multipivot_block_cap(idx, qn, n_pivots=eng.n_pivots)
+            leaf_alive = leaf_alive & (cap + eng.margin >= tau0[:, None])
 
         # host-side compaction: the union over the query batch of surviving
         # leaves is the data-dependent part, so the kernel grid shrinks to
@@ -564,7 +587,6 @@ class TreeBackend:
 
         m_tiles = computed.shape[0]
         computed_sum = computed.astype(jnp.float32).sum()
-        tree_pruned = (~leaf_alive).sum().astype(jnp.float32)
         raw = {
             # over the FULL (query tile, block tile) grid: compacted-away
             # tiles were never dispatched, which is the whole point

@@ -31,6 +31,15 @@ def floats(lo: float, hi: float, allow_nan: bool = False,
                      [lo, hi, (lo + hi) / 2.0])
 
 
+def sampled_from(elements) -> _Strategy:
+    # every element is a boundary value: the sweep visits each at least
+    # once before random sampling kicks in
+    elements = list(elements)
+    return _Strategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))],
+        list(elements))
+
+
 def settings(max_examples: int = 100, deadline=None, **_kw):
     def deco(fn):
         fn._max_examples = max_examples
@@ -66,6 +75,7 @@ def install() -> None:
     st = types.ModuleType("hypothesis.strategies")
     st.integers = integers
     st.floats = floats
+    st.sampled_from = sampled_from
     hyp = types.ModuleType("hypothesis")
     hyp.given = given
     hyp.settings = settings

@@ -157,3 +157,96 @@ def test_pivot_set_bounds(seed, n_piv, d):
     # bounds against fp32 scores, with an explicit margin — exactness is
     # covered by the brute-force equivalence tests.)
     assert lo - 2e-3 <= true <= hi + 2e-3
+
+
+# ---------------------------------------------------------------------------
+# joint multi-pivot bound (DESIGN.md §3.8): degenerate pivot counts,
+# duplicate pivots, and pole safety of the clamped radicands
+# ---------------------------------------------------------------------------
+
+def test_build_index_clamps_excess_pivot_request():
+    """Asking for more pivots than the corpus has rows clamps to n; the
+    bound tables stay consistent and search stays brute-exact."""
+    import jax.numpy as jnp
+    from repro.core.index import build_index
+    from repro.search import SearchEngine
+    rng = np.random.default_rng(3)
+    db = ref.normalize(rng.normal(size=(5, 8))).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=64, block_size=4)
+    assert idx.pivots.shape[0] == 5 == idx.bound_table_width
+    eng = SearchEngine(idx, backend="scan", n_pivots=99)   # clamps again
+    assert eng.n_pivots == 5
+    s, _, _ = eng.search(jnp.asarray(db[:2]), 3)
+    sref, _ = ref.brute_force_knn(db[:2], db, 3)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+
+
+def test_duplicate_pivots_tiny_corpus_stay_valid():
+    """An all-identical corpus forces duplicate pivots (singular Gram);
+    the Cholesky jitter escalation keeps the basis finite and the joint
+    cap a true upper bound."""
+    import jax.numpy as jnp
+    from repro.core.index import build_index, multipivot_block_cap
+    rng = np.random.default_rng(4)
+    row = ref.normalize(rng.normal(size=(1, 8)))
+    db = np.repeat(row, 6, axis=0).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=4)
+    assert np.isfinite(np.asarray(idx.ortho)).all()
+    q = ref.normalize(rng.normal(size=(2, 8))).astype(np.float32)
+    cap = np.asarray(multipivot_block_cap(
+        idx, jnp.asarray(q), n_pivots=idx.bound_table_width))
+    true = ref.cosine_matrix(q, db)
+    assert np.isfinite(cap).all()
+    # every row is identical, so even the loosest block's cap must clear
+    # the (common) true similarity
+    assert (cap.min(axis=1) >= true.max(axis=1) - 1e-6).all()
+
+
+def test_radicand_clamp_pole_inputs_nan_free():
+    """fp32 rounding can push |s| microscopically past 1; every bound's
+    clamped radicand keeps the result finite there (paper §4.2 note)."""
+    import jax.numpy as jnp
+    over = np.float32(1.0) + np.float32(1e-6)
+    vals = jnp.asarray([1.0, -1.0, over, -over], jnp.float32)
+    a, b = jnp.meshgrid(vals, vals)
+    assert np.isfinite(np.asarray(bounds.ub_mult(a, b))).all()
+    assert np.isfinite(np.asarray(bounds.ub_euclid(a, b))).all()
+    assert np.isfinite(np.asarray(bounds.ub_arccos(a, b))).all()
+    for name, fn in bounds.LOWER_BOUNDS.items():
+        assert np.isfinite(np.asarray(fn(a, b))).all(), name
+
+
+def test_joint_bound_pole_norms_nan_free_and_valid():
+    """|alpha|^2, |beta|^2 at and microscopically above 1 (the in-span
+    corner): the joint bound clamps both norms — finite, and still above
+    the exact in-span dot product."""
+    import jax.numpy as jnp
+    over = np.float32(1.0) + np.float32(1e-6)
+    # alpha rows: exactly unit, slightly-over unit (fp32 rounding)
+    alpha = jnp.asarray([[1.0, 0.0], [over, 0.0]], jnp.float32)
+    beta = jnp.asarray([[1.0, 0.0], [0.0, over]], jnp.float32)
+    beta_nsq = jnp.asarray([1.0, over * over], jnp.float32)
+    out = np.asarray(bounds.joint_row_upper_bound(alpha, beta, beta_nsq))
+    assert np.isfinite(out).all()
+    # in-span exact dot products (fp64): [[1, 0], [1, 0]] row-wise
+    t = np.asarray(alpha, np.float64) @ np.asarray(beta, np.float64).T
+    assert (out >= t - 1e-9).all()
+
+
+def test_bound_provider_registry_contract():
+    """eq13_multi never exceeds eq13 (pointwise intersection), and unknown
+    provider names fail loudly with the known set."""
+    import jax.numpy as jnp
+    from repro.core.index import build_index
+    rng = np.random.default_rng(5)
+    db = ref.normalize(rng.normal(size=(64, 12))).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=16)
+    q = ref.normalize(rng.normal(size=(3, 12))).astype(np.float32)
+    qn = jnp.asarray(q)
+    qp = qn @ idx.pivots.T
+    base = np.asarray(bounds.block_upper_provider("eq13")(idx, qn, qp, 0))
+    both = np.asarray(
+        bounds.block_upper_provider("eq13_multi")(idx, qn, qp, 4))
+    assert (both <= base + 1e-7).all()
+    with pytest.raises(KeyError, match="eq13"):
+        bounds.block_upper_provider("no_such_family")

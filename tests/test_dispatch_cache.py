@@ -120,3 +120,40 @@ def test_stats_dict_roundtrips_retraces(db, queries):
     eng = _engine(db, "scan")
     _, _, st = eng.search(queries, K)
     assert st.as_dict()["retraces"] == st.retraces
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel", "tree"])
+def test_n_pivots_joins_cache_signature(db, queries, backend):
+    """ISSUE 7: the joint-bound depth is part of the fused-dispatch cache
+    key — warm repeats at n_pivots > 0 stay retrace-free, changing the
+    knob misses exactly once, and switching back hits the retained
+    entry.  Exactness holds at every depth."""
+    eng = _engine(db, backend, bound_pivots=2)
+    assert eng.n_pivots == 2
+    _, _, cold = eng.search(queries, K)
+    per_trace = cold.retraces
+    assert per_trace >= 1
+    sims, _, warm = eng.search(queries, K)
+    assert warm.retraces == 0
+    sref, _ = ref.brute_force_knn(queries, db, K)
+    np.testing.assert_allclose(np.asarray(sims), sref, atol=3e-5)
+
+    eng.n_pivots = 4                      # knob change -> one new callee
+    sims, _, st = eng.search(queries, K)
+    assert st.retraces == per_trace
+    assert st.n_pivots == 4
+    np.testing.assert_allclose(np.asarray(sims), sref, atol=3e-5)
+    _, _, st2 = eng.search(queries, K)
+    assert st2.retraces == 0
+
+    eng.n_pivots = 2                      # first entry retained, not evicted
+    _, _, st3 = eng.search(queries, K)
+    assert st3.retraces == 0
+
+
+def test_brute_backend_reports_no_pivot_depth(db, queries):
+    # brute consumes no bounds: the stats field is None, not a number that
+    # suggests the cap was evaluated
+    eng = _engine(db, "brute", bound_pivots=4)
+    _, _, st = eng.search(queries, K)
+    assert st.n_pivots is None

@@ -1,0 +1,202 @@
+"""Multi-pivot joint-bound validity (DESIGN.md §3.8).
+
+ISSUE 7 satellite: the intersected k-pivot upper bound (the ``eq13_multi``
+provider's cap) (a) never undercuts the true cosine — including the
+adversarial near-antipodal, duplicate-pivot and in-span cases where the
+radicand or the Cholesky factor degenerates, (b) dominates the
+single-pivot Eq. 13 bound and tightens monotonically with depth (the
+jittered-lift argument: more coordinates of the same orthonormal lift can
+only shrink the residual term), and (c) leaves every backend tie-aware
+brute-exact with the ``n_pivots`` knob switched on.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds, ref
+from repro.core.index import build_index, multipivot_block_cap
+from repro.core.pivots import orthonormal_pivot_basis
+from repro.search import SearchEngine
+from tests.conftest import clustered
+
+
+def _joint_ub(q, y, pivots, j):
+    """The index's joint bound for explicit unit vectors, mirroring its
+    precision split: fp64 basis + tables at build, fp32 evaluation."""
+    u = orthonormal_pivot_basis(np.asarray(pivots, np.float64))   # [P, d]
+    beta64 = np.asarray(y, np.float64)[None] @ u[:j].T            # [1, j]
+    alpha = (jnp.asarray(q, jnp.float32)[None]
+             @ jnp.asarray(u[:j], jnp.float32).T)
+    beta = jnp.asarray(beta64, jnp.float32)
+    bnsq = jnp.asarray((beta64 * beta64).sum(axis=1), jnp.float32)
+    return float(bounds.joint_row_upper_bound(alpha, beta, bnsq)[0, 0])
+
+
+def _unit(rng, d):
+    return ref.normalize(rng.normal(size=(1, d)))[0]
+
+
+# ---------------------------------------------------------------------------
+# (a) validity: the joint bound never undercuts the true fp64 cosine
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 32), st.integers(1, 6),
+       st.sampled_from(["random", "antipodal", "duplicate_pivots",
+                        "in_span", "query_is_pivot"]))
+def test_joint_ub_never_undercuts_true_cosine(seed, d, j, kind):
+    rng = np.random.default_rng(seed)
+    q = _unit(rng, d)
+    piv = ref.normalize(rng.normal(size=(max(2, j), d)))
+    if kind == "antipodal":
+        # near-antipodal target: s ~ -1, the radicand-clamp corner
+        y = ref.normalize((-q + 1e-6 * rng.normal(size=d))[None])[0]
+    elif kind == "duplicate_pivots":
+        # all-identical pivot set: singular Gram, the jitter-escalation
+        # path of orthonormal_pivot_basis
+        piv = np.repeat(piv[:1], len(piv), axis=0)
+        y = _unit(rng, d)
+    elif kind == "in_span":
+        # y inside the pivot span: ||beta|| ~ 1, residual ~ 0 — the bound
+        # collapses to the fp32 dot product, where only the slack protects
+        y = piv.T @ rng.normal(size=len(piv))
+        nrm = np.linalg.norm(y)
+        y = piv[0] if nrm < 1e-9 else y / nrm
+    elif kind == "query_is_pivot":
+        q = piv[0]
+        y = _unit(rng, d)
+    else:
+        y = _unit(rng, d)
+    true = float(np.asarray(q, np.float64) @ np.asarray(y, np.float64))
+    assert _joint_ub(q, y, piv, j) >= true - 1e-6, (kind, seed, d, j)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 24), st.integers(1, 6))
+def test_block_cap_never_undercuts_block_max(seed, d, j):
+    """Block granularity: the cap for every (query, block) pair sits at or
+    above the largest true similarity inside that block."""
+    rng = np.random.default_rng(seed)
+    db = rng.normal(size=(96, d)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=8, block_size=16)
+    q = ref.normalize(rng.normal(size=(3, d))).astype(np.float32)
+    cap = np.asarray(multipivot_block_cap(idx, jnp.asarray(q), n_pivots=j))
+    true = ref.cosine_matrix(q, db)                       # fp64 [3, 96]
+    rows = np.asarray(idx.row_ids)
+    for b in range(idx.n_blocks):
+        ids = rows[b * 16:(b + 1) * 16]
+        ids = ids[ids >= 0]
+        if len(ids) == 0:
+            continue
+        assert (cap[:, b] >= true[:, ids].max(axis=1) - 1e-6).all(), (b, j)
+
+
+# ---------------------------------------------------------------------------
+# (b) dominance: joint(1) <= Eq. 13 on the first pivot; monotone in depth
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 32), st.integers(2, 6))
+def test_joint_ub_dominates_single_pivot_eq13(seed, d, p):
+    rng = np.random.default_rng(seed)
+    q, y = _unit(rng, d), _unit(rng, d)
+    piv = ref.normalize(rng.normal(size=(p, d)))
+    ubs = [_joint_ub(q, y, piv, j) for j in range(1, p + 1)]
+    single = float(ref.ub_mult(float(np.float64(q @ piv[0])),
+                               float(np.float64(y @ piv[0]))))
+    # the eps-jitter lift moves the j=1 bound by O(sqrt(eps)) only where
+    # 1 - s^2 ~ eps (the pole); 2e-3 is the same pole allowance
+    # test_pivot_set_bounds uses, plus the bound's own additive slack
+    assert ubs[0] <= single + 2e-3 + bounds.JOINT_SLACK
+    # deeper prefixes only tighten (identical slack on both sides cancels;
+    # the margin is pure fp32 evaluation noise)
+    for deeper, shallower in zip(ubs[1:], ubs):
+        assert deeper <= shallower + 5e-5, (seed, d, p)
+
+
+# ---------------------------------------------------------------------------
+# (c) engine equivalence: every backend stays brute-exact with the knob on
+# ---------------------------------------------------------------------------
+
+def _fp64_profile(q, db, ids):
+    """Exact fp64 similarity profile of a returned id set, sorted desc —
+    tie-safe where raw id comparison is not."""
+    qn = q.astype(np.float64)
+    qn /= np.linalg.norm(qn, axis=1, keepdims=True)
+    dbn = db.astype(np.float64)
+    dbn /= np.linalg.norm(dbn, axis=1, keepdims=True)
+    sims = np.einsum("md,mkd->mk", qn, dbn[np.maximum(np.asarray(ids), 0)])
+    sims = np.where(np.asarray(ids) >= 0, sims, -np.inf)
+    return -np.sort(-sims, axis=1)
+
+
+def _adversarial(rng, n, d):
+    n_dup = n // 3
+    base = clustered(rng, n - n_dup, d, n_centers=4, noise=0.01)
+    dup = base[rng.integers(0, len(base), n_dup)] + 1e-4 * rng.normal(
+        size=(n_dup, d)).astype(np.float32)
+    x = np.concatenate([base, dup])
+    return (x / np.linalg.norm(x, axis=1, keepdims=True)).astype(np.float32)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(60, 400), st.integers(4, 24), st.integers(1, 10),
+       st.integers(0, 10_000))
+def test_all_backends_match_brute_with_joint_cap(n, d, k, seed):
+    """scan / kernel / tree / sharded / sharded_tree with the joint cap
+    intersected all return the fp64 brute result set (profile-equal on
+    ties), and report the resolved depth in stats."""
+    import jax
+    from repro.core.distributed import (build_sharded_index,
+                                        place_sharded_index)
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:
+        db = rng.normal(size=(n, d)).astype(np.float32)
+    elif kind == 1:
+        db = clustered(rng, n, d)
+    else:
+        db = _adversarial(rng, n, d)
+    k = min(k, n)
+    q = rng.normal(size=(3, d)).astype(np.float32)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
+    sref, _ = ref.brute_force_knn(q, db, k)               # fp64 oracle
+
+    mesh = jax.make_mesh((1,), ("data",))
+    sidx = place_sharded_index(
+        build_sharded_index(db, 1, n_pivots=4, block_size=32), mesh)
+    for npv in (1, 2, 4):
+        runs = {
+            "scan": SearchEngine(idx, backend="scan", n_pivots=npv),
+            "kernel": SearchEngine(idx, backend="kernel", bm=8,
+                                   n_pivots=npv),
+            "tree": SearchEngine(idx, backend="tree", bm=8, n_pivots=npv),
+            "sharded": SearchEngine(sidx, mesh=mesh, tree_shards=False,
+                                    n_pivots=npv),
+            "sharded_tree": SearchEngine(sidx, mesh=mesh, tree_shards=True,
+                                         n_pivots=npv),
+        }
+        for name, eng in runs.items():
+            s, i, stats = eng.search(jnp.asarray(q), k)
+            msg = f"{name} npv={npv} n={n} d={d} k={k} seed={seed}"
+            np.testing.assert_allclose(np.asarray(s), sref, atol=5e-5,
+                                       err_msg=msg)
+            np.testing.assert_allclose(_fp64_profile(q, db, i), sref,
+                                       rtol=0, atol=1e-12, err_msg=msg)
+            assert stats.n_pivots == npv, msg
+
+
+def test_explicit_depth_beyond_table_width_clamps(rng):
+    """Asking for more depth than the index holds bound tables for clamps
+    to the table width (and stays exact) rather than erroring."""
+    db = clustered(rng, 300, 16)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
+    q = db[:5] + np.float32(0.01) * rng.normal(size=(5, 16)).astype(
+        np.float32)
+    eng = SearchEngine(idx, backend="scan", n_pivots=99)
+    assert eng.n_pivots == idx.bound_table_width == 4
+    s, _, stats = eng.search(jnp.asarray(q), 7)
+    sref, _ = ref.brute_force_knn(q, db, 7)
+    np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
+    assert stats.n_pivots == 4

@@ -58,6 +58,8 @@ REQUIRED_EXACTNESS = (
     "tree_matches_brute",
     "sharded_matches_brute",
     "sharded_tree_matches_brute",
+    # scan with the joint multi-pivot cap intersected (DESIGN.md §3.8)
+    "multipivot_matches_brute",
 )
 
 #: additionally required from FULL runs only: quick mode deliberately
