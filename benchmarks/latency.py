@@ -19,7 +19,14 @@ Rows (all microseconds unless named otherwise):
   on the same host are stable where absolute microseconds flake;
 * ``latency/<regime>/<backend>_matches_brute`` — exactness gates (1.0 =
   identical similarity profile to fp64 brute force), hard-failed by the
-  regression gate exactly like the pruning rows.
+  regression gate exactly like the pruning rows;
+* ``latency/online/...`` — the sustained-serving section: one scan
+  engine absorbs interleaved insert/delete batches
+  (:meth:`SearchEngine.online`) between query microbatches.
+  ``sustained_qps`` and ``mutation_us`` are informational absolutes
+  (host-dependent, like every ``*_us`` row); ``online_matches_brute``
+  is a required hard gate — after every mutation step the search
+  results must equal fp64 brute force over exactly the live corpus.
 
 Backends measured: ``brute`` (the no-index floor), ``base`` (flat scan,
 no warm start / best-first — the pre-engine pruned path), ``engine``
@@ -41,6 +48,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 if __name__ == "__main__":       # runnable from anywhere, TPU probe pinned off
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -149,7 +157,73 @@ def run(*, quick: bool = False, regimes=("clustered", "uniform"),
             rows.append((f"latency/{regime}/{name}_matches_brute",
                          _matches_brute(sims, db, q, k),
                          "exactness gate: must be 1.0"))
+    rows.extend(run_online(quick=quick, seed=seed))
     return rows
+
+
+def run_online(*, quick: bool = False, seed: int = 0):
+    """Sustained serving under mutation: interleave insert/delete batches
+    with query microbatches on one online scan engine (DESIGN.md §3.9).
+
+    The timed region covers mutations + searches (the steady-state serve
+    loop); the exactness audit — engine results vs fp64 brute force over
+    exactly the rows live at that moment — runs after each step, outside
+    the clock.  ``online_matches_brute`` is the min over all steps, so a
+    single stale tombstone or missed insert anywhere in the run fails
+    the 1.0 gate.
+    """
+    n, d = (1536, 32) if quick else (4096, 64)
+    steps = 6 if quick else 12
+    m, k, n_ins, n_del = 32, 10, 16, 4
+    rng = np.random.default_rng(seed + 2)
+    db = make_regime("clustered", n, d, seed)
+    eng = SearchEngine.build(db, n_pivots=16, block_size=128,
+                             backend="scan")
+    h = eng.online(auto_reoptimize=False)
+    live = {i: db[i] for i in range(n)}
+
+    def draw_queries():
+        base = np.stack([live[int(i)] for i in
+                         rng.choice(sorted(live), m, replace=False)])
+        return ref.normalize(
+            base + 0.01 * rng.normal(size=base.shape)).astype(np.float32)
+
+    # compile warmup — never timed, like benchmarks.timing does it
+    np.asarray(eng.search(jnp.asarray(draw_queries()), k)[0])
+    busy = mut_s = 0.0
+    n_queries = 0
+    exact = 1.0
+    for _ in range(steps):
+        new = rng.normal(size=(n_ins, d)).astype(np.float32)
+        dead = [int(x) for x in
+                rng.choice(sorted(live), size=n_del, replace=False)]
+        qs = [draw_queries() for _ in range(2)]
+        t0 = time.perf_counter()
+        ids = h.insert(new)
+        h.delete(dead)
+        mut_s += time.perf_counter() - t0
+        outs = [eng.search(jnp.asarray(q), k)[:2] for q in qs]
+        for s_, i_ in outs:
+            np.asarray(s_), np.asarray(i_)    # block: serving syncs here
+        busy += time.perf_counter() - t0
+        n_queries += len(qs) * m
+        for i, r in zip(ids, new):
+            live[i] = r
+        for x in dead:
+            del live[x]
+        # untimed audit vs exactly the live corpus
+        live_rows = np.stack([live[i] for i in sorted(live)])
+        exact = min(exact,
+                    _matches_brute(outs[-1][0], live_rows, qs[-1], k))
+    return [
+        ("latency/online/sustained_qps", n_queries / busy,
+         f"{steps} steps x ({n_ins} ins + {n_del} del + {2 * m} queries); "
+         f"informational"),
+        ("latency/online/mutation_us", 1e6 * mut_s / (2 * steps),
+         "mean per insert-or-delete call; informational"),
+        ("latency/online/online_matches_brute", exact,
+         "exactness gate vs live corpus after every step: must be 1.0"),
+    ]
 
 
 def main(argv=None) -> int:

@@ -40,6 +40,14 @@ hosts with one chip each.  Exactness is likewise unchanged, because
 pivots were *always* shard-local (see §3.7: local pivots only loosen a
 shard's bounds relative to global pivots, and a loose bound can only
 under-prune, never cut a true neighbor).
+
+**Online mutation is not supported here.**  The single-shard engines are
+mutable through :class:`repro.core.online.MutableIndex` (DESIGN.md §3.9),
+but a sharded store has no well-defined insert without a cross-host row
+placement protocol (which shard owns the new row? who reassigns ids on a
+rebalance?), so ``SearchEngine.online()`` raises ``NotImplementedError``
+on sharded engines; rebuild via ``SearchEngine.build(distributed=True)``
+when the corpus changes.
 """
 from __future__ import annotations
 

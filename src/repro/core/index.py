@@ -233,60 +233,21 @@ def multipivot_block_cap(index: BlockIndex, qn: Array, *, n_pivots: int) -> Arra
     return row_ub.reshape(m, index.n_blocks, -1).max(axis=-1)
 
 
-def search(
-    index: BlockIndex,
-    queries: Array,
-    k: int,
-    *,
-    prune: bool = True,
-    margin: float = 4e-7,
-    element_stats: bool = False,
-    **unsupported,
-):
-    """Deprecated: use :class:`repro.search.SearchEngine`.
+def search(*args, **kwargs):
+    """Removed: use :class:`repro.search.SearchEngine`.
 
-    Thin shim over the unified runtime's ``scan`` backend, preserving the
-    historical signature and stats dict (natural block order, no τ
-    warm-start); the migration table lives in docs/search-api.md.  Returns ``(sims [m,k] f32, idx [m,k] i32, stats)``:
-      ``block_prune_frac``   fraction of (query, block) pairs skipped,
-      ``elem_prune_frac``    fraction of (query, point) pairs whose individual
-                             Eq. 13 bound also prunes them (only if
-                             ``element_stats``; upper bound on finer-grained
-                             pruning available to a scalar CPU index).
-    The result is exact: identical set to brute force (see tests).
-
-    Engine-level knobs (``warm_start``, ``best_first``, ``backend``, ...)
-    are intentionally NOT forwarded: accepting them here and silently
-    ignoring them would return different pruning stats than the caller
-    asked for, so they raise :class:`TypeError` with the migration hint.
+    This was the pre-engine entry point; it then spent one release as a
+    DeprecationWarning shim over the ``scan`` backend and is now a hard
+    error — silently executing with a legacy default policy (natural
+    block order, no τ warm-start) made benchmark numbers incomparable
+    with the engine's.  The migration table is in docs/search-api.md.
     """
-    if unsupported:
-        raise TypeError(
-            f"repro.core.index.search() got unsupported keyword argument(s) "
-            f"{sorted(unsupported)}; this deprecated shim only accepts "
-            f"prune/margin/element_stats. Engine-level knobs (warm_start, "
-            f"best_first, warm_start_blocks, backend, ...) belong to "
-            f"repro.search.SearchEngine — see the migration table in "
-            f"docs/search-api.md.")
-    import warnings
-    warnings.warn(
-        "repro.core.index.search is deprecated; use "
-        "repro.search.SearchEngine (docs/search-api.md has the migration "
-        "table)", DeprecationWarning, stacklevel=2)
-    from repro.search.backends import (map_row_ids, prep_queries,
-                                       scan_search)
-    qn, qp = prep_queries(index, queries)
-    top_s, pos, blk_pruned, elem_pruned = scan_search(
-        index, qn, qp, k, prune=prune, margin=margin,
-        warm_start=False, best_first=False, element_stats=element_stats)
-    top_i = map_row_ids(index.row_ids, pos)
-    m, nb = qn.shape[0], index.n_blocks
-    n_valid = index.valid.sum()
-    stats = {
-        "block_prune_frac": blk_pruned / (m * nb),
-        "elem_prune_frac": elem_pruned / (m * jnp.maximum(n_valid, 1)),
-    }
-    return top_s, top_i, stats
+    raise TypeError(
+        "repro.core.index.search() was removed. Use "
+        "repro.search.SearchEngine: "
+        "eng = SearchEngine(index, backend='scan'); "
+        "sims, ids, stats = eng.search(queries, k). The migration table "
+        "is in docs/search-api.md.")
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

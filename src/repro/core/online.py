@@ -1,0 +1,305 @@
+"""Online mutation for a live :class:`~repro.search.SearchEngine`.
+
+The block index (DESIGN.md §3.1) is a static pytree built for a frozen
+corpus; this module makes it *mutable* without giving up the bound
+machinery.  The trick is that every structure the search paths consult is
+valid under **conservative widening** (DESIGN.md §3.9):
+
+* inserts write rows into free padded slots (block tails, or freshly
+  appended all-padding blocks) and only *loosen* the per-block pivot
+  intervals ``dp_min/dp_max`` and the tree's node caches — a looser
+  interval can only make the Eq. 13 upper bound larger, so bounds remain
+  true upper bounds and search stays exact;
+* deletes are tombstones: flip ``valid`` off and leave every interval
+  untouched — stale-but-wide bounds never exclude a live row, and all
+  backends mask scores by per-row validity *before* top-k, so a
+  tombstoned row can never be returned.
+
+Widening degrades pruning power over time (intervals only grow,
+tombstones keep paying their bound checks), so the handle tracks a
+*pruning-decay estimate* — mutated rows as a fraction of the corpus size
+at the last (re)build — and triggers a deferred :meth:`reoptimize`
+(full rebuild: repack live rows, reselect pivots, tighten everything)
+once it crosses a threshold.
+
+Mutations are classified by whether the pytree *shapes* change:
+
+* shape-stable (tail inserts, deletes): the new index flows as an
+  argument through the engine's cached fused executables — zero
+  retraces (the dispatch key's ``index_epoch`` is unchanged);
+* shape-changing (appended blocks, reoptimize): the engine bumps
+  ``index_epoch`` and drops its dispatch caches, so the next search
+  pays exactly one retrace at the new shape.
+
+Sharded (multi-host / multi-device) engines are **not** mutable — each
+process only holds its local shard and a cross-host insert would need a
+placement protocol; :class:`MutableIndex` refuses them up front (build a
+fresh sharded engine via ``SearchEngine.build(distributed=True)``
+instead).
+
+External row ids are stable across the handle's lifetime: the ids
+returned by :meth:`insert` (and the original ``0..n-1`` corpus ids)
+survive :meth:`reoptimize` unchanged, so id-aligned side tables (e.g.
+the kNN-LM value array, :mod:`repro.serve.knnlm`) never need remapping.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import BlockIndex, build_index
+
+__all__ = ["MutableIndex"]
+
+
+def _append_blocks(index: BlockIndex, n_add: int) -> BlockIndex:
+    """Grow the index by ``n_add`` all-padding blocks (neutral ``[0, 0]``
+    intervals, ``valid`` False, ``row_ids`` -1) — a pure shape change; no
+    live row moves."""
+    bs = index.block_size
+    nr = n_add * bs
+    p = index.dp.shape[1]
+    zrows = jnp.zeros((nr, index.db.shape[1]), index.db.dtype)
+    zdp = jnp.zeros((nr, p), index.dp.dtype)
+    new = index._replace(
+        db=jnp.concatenate([index.db, zrows]),
+        dp=jnp.concatenate([index.dp, zdp]),
+        valid=jnp.concatenate([index.valid,
+                               jnp.zeros((nr,), index.valid.dtype)]),
+        row_ids=jnp.concatenate([index.row_ids,
+                                 jnp.full((nr,), -1, jnp.int32)]),
+        dp_min=jnp.concatenate([index.dp_min,
+                                jnp.zeros((n_add, p), index.dp_min.dtype)]),
+        dp_max=jnp.concatenate([index.dp_max,
+                                jnp.zeros((n_add, p), index.dp_max.dtype)]),
+    )
+    if index.beta is not None:
+        new = new._replace(
+            beta=jnp.concatenate([index.beta, zdp]),
+            beta_nsq=jnp.concatenate([index.beta_nsq, zdp]),
+        )
+    return new
+
+
+class MutableIndex:
+    """Insert/delete/reoptimize handle over a ``SearchEngine``'s index.
+
+    Obtain one via :meth:`SearchEngine.online`; do not construct two
+    handles over the same engine (the handle owns host-side mirrors —
+    the free-slot list and the external-id → slot map — that must stay
+    in sync with the device arrays).
+
+    Args:
+      engine: the engine to mutate (single-shard backends only).
+      reoptimize_threshold: trigger a full rebuild once
+        ``decay_estimate`` (mutated rows / corpus size at last build)
+        reaches this value.
+      auto_reoptimize: if False, never rebuild implicitly — the caller
+        watches ``decay_estimate`` and calls :meth:`reoptimize` at a
+        convenient moment (e.g. off the serving hot path).
+    """
+
+    def __init__(self, engine, *, reoptimize_threshold: float = 0.5,
+                 auto_reoptimize: bool = True):
+        index = engine.index
+        if engine.backend_name == "sharded" or index.db.ndim != 2:
+            raise NotImplementedError(
+                "online mutation is not supported for sharded engines: each "
+                "process holds only its local shard, and an insert would "
+                "need a cross-host placement protocol (see repro.core."
+                "distributed). Rebuild with SearchEngine.build(..., "
+                "distributed=True), or mutate a single-shard engine.")
+        self.engine = engine
+        self.reoptimize_threshold = float(reoptimize_threshold)
+        self.auto_reoptimize = bool(auto_reoptimize)
+        #: total mutation calls applied through this handle (also
+        #: surfaced as ``SearchStats.generation``)
+        self.generation = 0
+        self._mutations_since_opt = 0
+        row_ids = np.asarray(index.row_ids)
+        self._id_pos = {int(r): int(p) for p, r in enumerate(row_ids)
+                        if r >= 0}
+        # descending so list.pop() hands out the lowest free slot first
+        # (keeps inserts packed toward block fronts)
+        self._free = sorted(
+            np.flatnonzero(row_ids < 0).tolist(), reverse=True)
+        self._next_id = max(self._id_pos, default=-1) + 1
+        self._rows_at_opt = max(1, len(self._id_pos))
+
+    # ------------------------------------------------------------- inspect
+    @property
+    def n_live(self) -> int:
+        """Number of live (searchable) rows."""
+        return len(self._id_pos)
+
+    @property
+    def decay_estimate(self) -> float:
+        """Mutated rows since the last (re)build, as a fraction of the
+        corpus size at that build — the proxy for how much pruning power
+        the widened intervals have lost (DESIGN.md §3.9)."""
+        return self._mutations_since_opt / self._rows_at_opt
+
+    def __contains__(self, row_id: int) -> bool:
+        return int(row_id) in self._id_pos
+
+    # -------------------------------------------------------------- insert
+    def insert(self, rows) -> list[int]:
+        """Insert ``rows`` ([n, d] or [d]); returns their external ids.
+
+        Rows are normalized here (cosine search stores unit vectors).
+        Free padded slots are filled first; if they run out, all-padding
+        blocks are appended (a shape change — the next search retraces
+        once).  Affected block intervals, joint-bound table rows and —
+        when the tree backend has already built one — the tree's
+        root-to-leaf node caches are conservatively widened in one fused
+        scatter per table.
+        """
+        rows64 = np.asarray(rows, np.float64)
+        if rows64.ndim == 1:
+            rows64 = rows64[None, :]
+        n_new = rows64.shape[0]
+        if n_new == 0:
+            return []
+        eng = self.engine
+        index = eng.index
+        if rows64.shape[1] != index.db.shape[1]:
+            raise ValueError(
+                f"inserted rows have dim {rows64.shape[1]}, "
+                f"index has dim {index.db.shape[1]}")
+        norms = np.linalg.norm(rows64, axis=1, keepdims=True)
+        rows64 = rows64 / np.where(norms == 0.0, 1.0, norms)
+
+        bs = index.block_size
+        shape_changed = False
+        if len(self._free) < n_new:
+            n_add = -(-(n_new - len(self._free)) // bs)
+            old_slots = index.db.shape[0]
+            index = _append_blocks(index, n_add)
+            self._free = sorted(
+                self._free + list(range(old_slots, old_slots + n_add * bs)),
+                reverse=True)
+            shape_changed = True
+        pos = np.array([self._free.pop() for _ in range(n_new)], np.int64)
+        ids = list(range(self._next_id, self._next_id + n_new))
+
+        posj = jnp.asarray(pos, jnp.int32)
+        blkj = jnp.asarray(pos // bs, jnp.int32)
+        rows_n = jnp.asarray(rows64, jnp.float32)
+        # same fp32 product the flat search paths compare against, so the
+        # widened intervals bound exactly what the kernels compute
+        dp_new = rows_n @ index.pivots.T                     # [n_new, P]
+        new_index = index._replace(
+            db=index.db.at[posj].set(rows_n),
+            dp=index.dp.at[posj].set(dp_new),
+            valid=index.valid.at[posj].set(True),
+            row_ids=index.row_ids.at[posj].set(
+                jnp.asarray(ids, jnp.int32)),
+            dp_min=index.dp_min.at[blkj].min(dp_new),
+            dp_max=index.dp_max.at[blkj].max(dp_new),
+        )
+        if index.ortho is not None:
+            # stored basis is fp32; the upcast error vs the build-time fp64
+            # basis is ~1e-7 per coordinate, absorbed by JOINT_SLACK
+            u64 = np.asarray(index.ortho, np.float64)
+            beta64 = rows64 @ u64.T
+            bnsq64 = np.cumsum(beta64 * beta64, axis=1)
+            new_index = new_index._replace(
+                beta=index.beta.at[posj].set(
+                    jnp.asarray(beta64, jnp.float32)),
+                beta_nsq=index.beta_nsq.at[posj].set(
+                    jnp.asarray(bnsq64, jnp.float32)),
+            )
+
+        tree = tvn = None
+        if not shape_changed and eng._tree_index is not None:
+            from repro.search.tree import widen_tree
+            tree = widen_tree(eng._tree_index, new_index, blkj, dp_new)
+            tvn = tree.n_valid_nodes
+
+        for i, p in zip(ids, pos):
+            self._id_pos[i] = int(p)
+        self._next_id += n_new
+        self.generation += 1
+        self._mutations_since_opt += n_new
+        eng._apply_mutation(new_index, n_valid=len(self._id_pos),
+                            shape_changed=shape_changed, tree=tree,
+                            tree_valid_nodes=tvn)
+        self._maybe_reoptimize()
+        return ids
+
+    # -------------------------------------------------------------- delete
+    def delete(self, ids) -> None:
+        """Tombstone-delete rows by external id.
+
+        ``valid`` flips off and ``row_ids`` goes -1; the block/tree
+        intervals stay conservatively wide (a bound that is too loose is
+        still a bound), and every backend masks by per-row validity
+        before top-k, so deleted rows are unreachable immediately.
+        Raises ``KeyError`` (before any state changes) if any id is not
+        live.
+        """
+        if isinstance(ids, (int, np.integer)):
+            ids = [ids]
+        ids = [int(i) for i in ids]
+        if not ids:
+            return
+        bad = [i for i in ids if i not in self._id_pos]
+        if bad:
+            raise KeyError(
+                f"row ids {bad} are not in the live set (never inserted, "
+                f"or already deleted)")
+        if len(set(ids)) != len(ids):
+            raise KeyError(f"duplicate row ids in delete: {ids}")
+        pos = [self._id_pos.pop(i) for i in ids]
+        posj = jnp.asarray(pos, jnp.int32)
+        index = self.engine.index
+        new_index = index._replace(
+            valid=index.valid.at[posj].set(False),
+            row_ids=index.row_ids.at[posj].set(-1),
+        )
+        self._free = sorted(self._free + pos, reverse=True)
+        self.generation += 1
+        self._mutations_since_opt += len(pos)
+        self.engine._apply_mutation(new_index,
+                                    n_valid=len(self._id_pos),
+                                    shape_changed=False)
+        self._maybe_reoptimize()
+
+    # ---------------------------------------------------------- reoptimize
+    def reoptimize(self) -> None:
+        """Full rebuild: repack live rows, reselect pivots, tighten every
+        interval.  External ids are preserved (remapped through the new
+        build's permutation).  A shape change: caches drop, next search
+        retraces once."""
+        eng = self.engine
+        index = eng.index
+        row_ids = np.asarray(index.row_ids)
+        live = np.flatnonzero(row_ids >= 0)
+        self._rows_at_opt = max(1, live.size)
+        self._mutations_since_opt = 0
+        self.generation += 1
+        if live.size == 0:
+            # nothing to repack; keep the (all-padding) index as is
+            return
+        ext_ids = row_ids[live].astype(np.int32)
+        rows = np.asarray(index.db)[live]
+        new = build_index(rows, n_pivots=int(index.pivots.shape[0]),
+                          block_size=index.block_size)
+        # the fresh build numbers rows 0..n_live-1; map back to external ids
+        nr = np.asarray(new.row_ids)
+        mapped = np.where(nr >= 0,
+                          ext_ids[np.clip(nr, 0, live.size - 1)],
+                          -1).astype(np.int32)
+        new = new._replace(row_ids=jnp.asarray(mapped))
+        self._id_pos = {int(r): int(p) for p, r in enumerate(mapped)
+                        if r >= 0}
+        self._free = sorted(
+            np.flatnonzero(mapped < 0).tolist(), reverse=True)
+        eng._apply_mutation(new, n_valid=live.size, shape_changed=True)
+
+    def _maybe_reoptimize(self) -> None:
+        if (self.auto_reoptimize
+                and self.decay_estimate >= self.reoptimize_threshold):
+            self.reoptimize()

@@ -42,7 +42,7 @@ _NEG_INF = float("-inf")
 def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool,
                  element_stats: bool, use_cap: bool = False):
     def kernel(order_ref, nvalid_ref, tau_ref, qn_ref, db_ref, qp_ref,
-               lo_ref, hi_ref, *rest):
+               lo_ref, hi_ref, rv_ref, *rest):
         if use_cap:
             cap_ref, rest = rest[0], rest[1:]
         if element_stats:
@@ -87,6 +87,11 @@ def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool,
         tau = top_s[:, k - 1]                             # running kth best
         row = i * bm + jax.lax.broadcasted_iota(jnp.int32, (qp.shape[0], 1), 0)[:, 0]
         live = row < nvalid_ref[0, 1]                     # padded query rows
+        # per-row db validity for this tile: padding AND tombstoned rows.
+        # Mutable indexes (repro.core.online) tombstone-delete in place, so
+        # valid rows need not be a prefix — a scalar n_valid cut-off would
+        # score deleted rows into the top-k.
+        vmask = rv_ref[...][:, 0] > 0                     # [BN]
         if prune:
             # padded query rows (>= m_valid) must not force computation
             needed = jnp.any((ub + margin >= tau) & live)
@@ -108,9 +113,8 @@ def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool,
                 rad = rad_q[:, p_i:p_i + 1] * jnp.maximum(0.0, 1.0 - b * b)
                 cand = a * b + jnp.sqrt(rad)
                 eub = cand if eub is None else jnp.minimum(eub, cand)
-            ecol = jb * bn + jax.lax.broadcasted_iota(jnp.int32, eub.shape, 1)
             epruned = ((eub + margin < tau[:, None])
-                       & (ecol < nvalid_ref[0, 0]) & live[:, None])
+                       & vmask[None, :] & live[:, None])
             elem_ref[0, 0] = epruned.sum().astype(jnp.int32)
 
         @pl.when(needed)
@@ -122,7 +126,7 @@ def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool,
                 preferred_element_type=jnp.float32,
             )                                             # [BM, BN]
             col = jb * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-            scores = jnp.where(col < nvalid_ref[0, 0], scores, _NEG_INF)  # db pad
+            scores = jnp.where(vmask[None, :], scores, _NEG_INF)  # pad/tombstone
             cand_s = jnp.concatenate([top_s[...], scores], axis=1)
             cand_i = jnp.concatenate([top_i[...], col], axis=1)
             width = cand_s.shape[1]
@@ -166,6 +170,7 @@ def pruned_topk(
     block_order: Array | None = None,
     dp: Array | None = None,
     ub_cap: Array | None = None,
+    row_valid: Array | None = None,
     *,
     k: int,
     bm: int = DEFAULT_BM,
@@ -200,6 +205,12 @@ def pruned_topk(
                min'd into the interval bound inside the kernel before the
                skip test.  Must be valid upper bounds on every score in
                the tile; exactness is the caller's obligation.
+      row_valid: [N] optional bool/int per-row validity.  ``None`` (the
+               frozen-index case) derives the classic prefix mask
+               ``arange(N) < n_valid``.  Pass the index's ``valid`` vector
+               when rows can be tombstoned in place (mutable indexes,
+               DESIGN.md §3.9): the kernel masks scores per ROW, so
+               validity need not be a prefix.
       k:       top-k (k <= bn).
       element_stats: also count, per visited tile, the (query, row) pairs
                whose individual Eq. 13 bound is below the running τ — the
@@ -228,6 +239,9 @@ def pruned_topk(
         jnp.asarray(n_valid, jnp.int32).reshape(()),
         jnp.asarray(m_valid, jnp.int32).reshape(()),
     ]).reshape(1, 2)
+    if row_valid is None:
+        row_valid = jnp.arange(n) < jnp.asarray(n_valid, jnp.int32)
+    rv = row_valid.astype(jnp.int32).reshape(n, 1)
     if tau_init is None:
         tau = jnp.full((mp, 1), _NEG_INF, jnp.float32)
     else:
@@ -255,6 +269,7 @@ def pruned_topk(
         pl.BlockSpec((bm, p), lambda i, j, ord_: (i, 0)),  # qp
         pl.BlockSpec((1, p), lambda i, j, ord_: (ord_[i, j], 0)),   # lo
         pl.BlockSpec((1, p), lambda i, j, ord_: (ord_[i, j], 0)),   # hi
+        pl.BlockSpec((bn, 1), lambda i, j, ord_: (ord_[i, j], 0)),  # row valid
     ]
     out_specs = [
         pl.BlockSpec((bm, k), lambda i, j, ord_: (i, 0)),
@@ -262,7 +277,7 @@ def pruned_topk(
         # computed is indexed by the VISITED tile id, not the step
         pl.BlockSpec((1, 1), lambda i, j, ord_: (i, ord_[i, j])),
     ]
-    operands = [block_order, nv, tau, qn_p, db, qp_p, dp_min, dp_max]
+    operands = [block_order, nv, tau, qn_p, db, qp_p, dp_min, dp_max, rv]
     if use_cap:
         assert ub_cap.shape == (m, grid[1]), (ub_cap.shape, m, grid)
         # padded query rows carry cap 0: their ub shrinks, but the prune

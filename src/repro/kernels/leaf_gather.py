@@ -11,13 +11,14 @@ to the index block size, so per-block pivot intervals are reused directly
 (no coarsening) and the kernel grid shrinks from ``n_blocks`` to
 ``n_keep`` tiles.
 
-Shape contract: ``keep`` must be sorted ascending.  ``build_index``
-places padding rows last, so ascending block order keeps the compact
-array's valid rows a prefix — which is what ``pruned_topk``'s
-``col < n_valid`` masking assumes.  Exactness: the caller guarantees the
-kept set contains every block any query in the batch still needs; the
-kernel's own per-tile bound check then skips kept tiles that a risen τ
-has since invalidated.
+Shape contract: ``keep`` must be sorted ascending (stable tile order for
+the best-first permutation and the position mapping).  The compacted
+per-row ``valid`` vector rides along as ``pruned_topk``'s ``row_valid``
+operand, so validity need not be a prefix — tombstoned rows of a mutable
+index (:mod:`repro.core.online`) are masked per row exactly like padding.
+Exactness: the caller guarantees the kept set contains every block any
+query in the batch still needs; the kernel's own per-tile bound check
+then skips kept tiles that a risen τ has since invalidated.
 """
 from __future__ import annotations
 
@@ -96,7 +97,7 @@ def gathered_topk(
 
     sims, pos, computed, elem = cosine_topk.pruned_topk(
         qn, db_c, qp, lo_c, hi_c, n_valid,
-        tau_init=tau0, block_order=block_order, dp=dp_c,
+        tau_init=tau0, block_order=block_order, dp=dp_c, row_valid=valid_c,
         k=k, bm=bm, bn=bs, margin=margin, prune=True, interpret=interpret,
         element_stats=element_stats)
 

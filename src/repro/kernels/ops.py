@@ -1,19 +1,17 @@
-"""Deprecated jit'd wrappers around the Pallas kernels.
+"""Legacy jit'd wrappers around the Pallas kernels.
 
 The kernel search path moved into the unified runtime:
 :class:`repro.search.SearchEngine` with ``backend="kernel"`` (or the raw
-inner loop :func:`repro.search.backends.kernel_search`).  This module keeps
-the old entry points alive for existing callers; new code should go through
-the engine, which adds τ warm-start and best-first block ordering on top.
+inner loop :func:`repro.search.backends.kernel_search`).  The old
+``search_index`` entry point spent one release as a DeprecationWarning
+shim and is now a hard error (see docs/search-api.md for the migration
+table); ``block_bounds`` remains a supported thin wrapper.
 """
 from __future__ import annotations
-
-import warnings
 
 import jax
 from jax import Array
 
-from repro.core.index import BlockIndex
 from repro.kernels import bound_prune, cosine_topk  # noqa: F401  (re-export)
 from repro.search.backends import coarsen_intervals  # noqa: F401  (moved)
 
@@ -29,35 +27,16 @@ def block_bounds(qp: Array, dp_min: Array, dp_max: Array, *, interpret=None) -> 
     return bound_prune.block_bounds(qp, dp_min, dp_max, interpret=interpret)
 
 
-def search_index(
-    index: BlockIndex,
-    queries: Array,
-    k: int,
-    *,
-    bm: int = cosine_topk.DEFAULT_BM,
-    bn: int | None = None,
-    prune: bool = True,
-    sort_queries: bool = True,
-    warm_start: bool = False,
-    best_first: bool = False,
-    interpret: bool | None = None,
-):
-    """Deprecated: use ``SearchEngine(index, backend="kernel")``.
+def search_index(*args, **kwargs):
+    """Removed: use ``SearchEngine(index, backend="kernel")``.
 
-    Returns (sims [m,k], original row ids [m,k], computed_tile_frac scalar)
-    exactly as before; defaults preserve the historical behavior
-    (warm-start and best-first off).
+    The shim's historical defaults (warm-start and best-first off) made
+    its numbers incomparable with the engine's kernel backend, so it no
+    longer executes.  For the raw fixed-policy inner loop, call
+    :func:`repro.search.backends.kernel_search` directly.
     """
-    warnings.warn(
-        "repro.kernels.ops.search_index is deprecated; use "
-        "repro.search.SearchEngine(index, backend='kernel')",
-        DeprecationWarning, stacklevel=2)
-    from repro.search.backends import (kernel_search, map_row_ids,
-                                       prep_queries)
-    qn, qp = prep_queries(index, queries)
-    sims, pos, computed, _ = kernel_search(
-        index, qn, qp, k, bm=bm, bn=bn, prune=prune,
-        sort_queries=sort_queries, warm_start=warm_start,
-        best_first=best_first, interpret=interpret)
-    ids = map_row_ids(index.row_ids, pos)
-    return sims, ids, computed.mean()
+    raise TypeError(
+        "repro.kernels.ops.search_index() was removed. Use "
+        "repro.search.SearchEngine(index, backend='kernel').search(queries, "
+        "k), or the raw inner loop repro.search.backends.kernel_search. "
+        "The migration table is in docs/search-api.md.")

@@ -1,18 +1,39 @@
 """Unified search runtime: one backend-dispatched exact-cosine-kNN API.
 
   engine   — :class:`SearchEngine` facade (normalization, τ warm-start,
-             best-first ordering, stats, id mapping)
+             best-first ordering, stats, id mapping); ``.online()`` hands
+             out the engine's :class:`MutableIndex` mutation handle
   backends — registry + the ``scan`` / ``kernel`` / ``sharded`` / ``brute``
              inner loops
   tree     — the hierarchical pivot-tree backend (``backend="tree"``):
              transitive Eq. 13 descent over an array-encoded balanced tree
   stats    — the one :class:`SearchStats` dataclass every path returns
 
-See DESIGN.md §3 for the backend contract and §3.5 for the tree descent.
+This module is the package's canonical search surface: build with
+``SearchEngine.build(db, ...)`` (local or ``distributed=True``), search
+with ``engine.search(queries, k)``, mutate through ``engine.online()``.
+See DESIGN.md §3 for the backend contract, §3.5 for the tree descent and
+§3.9 for online mutation.
 """
-from repro.search.backends import (available_backends, get_backend,  # noqa: F401
+from repro.core.online import MutableIndex
+from repro.search.backends import (available_backends, get_backend,
                                    register_backend)
-from repro.search.engine import SearchEngine, auto_backend  # noqa: F401
-from repro.search.stats import SearchStats  # noqa: F401
-from repro.search.tree import (ShardTreeArrays, TreeIndex,  # noqa: F401
-                               build_shard_trees, build_tree)
+from repro.search.engine import SearchEngine, auto_backend
+from repro.search.stats import SearchStats
+from repro.search.tree import (ShardTreeArrays, TreeIndex,
+                               build_shard_trees, build_tree, widen_tree)
+
+__all__ = [
+    "MutableIndex",
+    "SearchEngine",
+    "SearchStats",
+    "ShardTreeArrays",
+    "TreeIndex",
+    "auto_backend",
+    "available_backends",
+    "build_shard_trees",
+    "build_tree",
+    "get_backend",
+    "register_backend",
+    "widen_tree",
+]

@@ -411,6 +411,7 @@ def kernel_search(
         qn, index.db, qp, lo, hi, n_valid,
         tau_init=tau_init, block_order=block_order,
         dp=index.dp if element_stats else None, ub_cap=ub_cap,
+        row_valid=index.valid,
         k=k, bm=bm, bn=bn, margin=margin, prune=prune, interpret=interpret,
         element_stats=element_stats,
     )
@@ -484,7 +485,6 @@ class ScanBackend:
         margin, warm_start = eng.margin, eng.warm_start
         best_first, wsb = eng.best_first, eng.warm_start_blocks
         n_piv = eng.n_pivots
-        n_valid = max(1, eng.n_valid)
 
         def body(index, queries, scratch=None):
             note()          # Python side effect: fires at trace time only
@@ -499,6 +499,9 @@ class ScanBackend:
             m, nb = qn.shape[0], index.n_blocks
             raw = {"block_prune_frac": blk_pruned / (m * nb)}
             if element_stats:
+                # traced, not captured: online mutation changes the live
+                # row count without retracing this callee
+                n_valid = jnp.maximum(index.valid.sum(), 1)
                 raw["elem_prune_frac"] = elem_pruned / (m * n_valid)
             if scratch is not None:
                 return s, ids, raw, out[4]
@@ -541,7 +544,6 @@ class KernelBackend:
         margin, interpret, wsb = eng.margin, eng.interpret, \
             eng.warm_start_blocks
         n_piv = eng.n_pivots
-        n_valid = max(1, eng.n_valid)
 
         @jax.jit
         def fused(index, queries):
@@ -559,6 +561,7 @@ class KernelBackend:
                    "tile_computed_frac": frac}
             if element_stats:
                 m = qn.shape[0]
+                n_valid = jnp.maximum(index.valid.sum(), 1)  # traced: online
                 raw["elem_prune_frac"] = (
                     elem.astype(jnp.float32).sum() / (m * n_valid))
             return s, ids, raw

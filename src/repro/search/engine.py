@@ -176,6 +176,13 @@ class SearchEngine:
         self._tree_index = None                 # built lazily by TreeBackend
         self._tree_valid_nodes = 0              # cached host count, ditto
         self._shard_tree = None                 # lazily by ShardedBackend
+        #: bumped on every SHAPE-CHANGING online mutation (appended blocks,
+        #: reoptimize); part of the fused-dispatch cache key, so
+        #: shape-stable mutations keep hitting the cached executable while
+        #: a grown index can never collide with a stale entry (whose
+        #: donated scratch would have the old shape)
+        self.index_epoch = 0
+        self._online = None                     # MutableIndex handle, if any
         self.tree_shards = tree_shards
         # dp_min is [nb, P] or [S, nb, P] when shard-stacked; the sharded
         # tree auto-rule looks at the PER-SHARD depth
@@ -318,6 +325,58 @@ class SearchEngine:
                           seed=seed)
         return cls(idx, **engine_kw)
 
+    # ------------------------------------------------------------- mutation
+    def online(self, **kw) -> "Any":
+        """The engine's :class:`~repro.core.online.MutableIndex` handle
+        (created on first use; one per engine).  Insert/delete/reoptimize
+        through it — the engine's index, tree and dispatch caches stay
+        consistent automatically.  Keyword args (``reoptimize_threshold``,
+        ``auto_reoptimize``) are forwarded on first creation only.
+        """
+        if self._online is None:
+            from repro.core.online import MutableIndex
+            self._online = MutableIndex(self, **kw)
+        elif kw:
+            raise ValueError(
+                "engine.online() already created its MutableIndex; "
+                "per-handle options can only be set on the first call")
+        return self._online
+
+    def _apply_mutation(self, new_index: BlockIndex, *, n_valid: int,
+                        shape_changed: bool, tree=None,
+                        tree_valid_nodes: int | None = None) -> None:
+        """Install a mutated index (called by
+        :class:`~repro.core.online.MutableIndex` only).
+
+        Shape-stable mutations keep every cached executable: the index is
+        an *argument* of the fused callees, so fresh arrays of the same
+        shape flow through the compiled code with zero retraces.  Shape
+        changes (appended blocks, reoptimize) bump ``index_epoch``, drop
+        the dispatch caches (their donated scratch buffers carry the old
+        shapes) and invalidate the lazily built tree.
+        """
+        self.index = new_index
+        self.n_valid = int(n_valid)
+        if shape_changed:
+            self.index_epoch += 1
+            self._fn_cache.clear()
+            self._sharded_fn.clear()
+            self._tree_index = None
+            self._tree_valid_nodes = 0
+            self._shard_tree = None
+            self.n_blocks = int(new_index.dp_min.shape[-2])
+            self.n_slots = int(new_index.db.shape[-2]) * (
+                int(new_index.db.shape[0]) if new_index.db.ndim == 3 else 1)
+        elif tree is not None:
+            self._tree_index = tree
+            if tree_valid_nodes is not None:
+                self._tree_valid_nodes = int(tree_valid_nodes)
+        elif self._tree_index is not None:
+            # validity flipped under an existing tree (tombstone delete):
+            # the node caches stay conservatively wide, but the tree must
+            # serve the NEW index arrays
+            self._tree_index = self._tree_index._replace(index=new_index)
+
     # ------------------------------------------------- fused dispatch cache
     def _note_trace(self):
         """Trace-time side effect: fused callables call this from inside
@@ -352,7 +411,7 @@ class SearchEngine:
                   and not isinstance(queries, jax.core.Tracer))
         key = (self.backend_name, kk, tuple(queries.shape),
                str(queries.dtype), prune, element_stats, donate,
-               self._knob_key())
+               self.index_epoch, self._knob_key())
         entry = self._fn_cache.get(key)
         if entry is None:
             fn = make(self, kk, prune=prune, element_stats=element_stats,
@@ -434,6 +493,10 @@ class SearchEngine:
             n_pivots=(None if self.backend_name == "brute"
                       else self.n_pivots),
             retraces=retraces,
+            generation=(self._online.generation
+                        if self._online is not None else None),
+            decay_estimate=(self._online.decay_estimate
+                            if self._online is not None else None),
             extras={k_: v for k_, v in raw.items()
                     if k_ not in ("block_prune_frac", "tile_computed_frac",
                                   "elem_prune_frac", "tree_prune_frac",

@@ -70,6 +70,12 @@ class SearchStats:
     single-formula ``eq13`` interval bound alone, ``None`` means the
     backend does not consume the knob (brute force).
 
+    ``generation`` / ``decay_estimate`` (engines with an online
+    :class:`~repro.core.online.MutableIndex` handle only) are the handle's
+    mutation counter and its tracked pruning-decay estimate at the time of
+    the call — host numbers, ``None`` on engines that never mutated
+    (DESIGN.md §3.9).
+
     **Absent-stage fields are ``None``, never 0.**  A stage that did not
     run (no tree built, element stats off, not the kernel) reports
     ``None``; ``0.0`` always means the stage ran and pruned/skipped
@@ -91,6 +97,8 @@ class SearchStats:
     best_first: bool = False
     n_pivots: int | None = None
     retraces: int | None = None
+    generation: int | None = None
+    decay_estimate: float | None = None
     extras: dict = field(default_factory=dict)
 
     # -- dict-style compatibility with the old ad-hoc stats dicts ----------

@@ -53,7 +53,7 @@ from repro.search import backends as _bk
 
 __all__ = ["TreeIndex", "ShardTreeArrays", "build_tree", "build_shard_trees",
            "tree_warm_start", "tree_warm_start_topk", "tree_descend",
-           "tree_search"]
+           "tree_search", "widen_tree"]
 
 
 class TreeIndex(NamedTuple):
@@ -145,6 +145,37 @@ def build_tree(index: BlockIndex) -> TreeIndex:
     nl = _next_pow2(nb)
     lo, hi, valid = _tree_arrays(index.dp_min, index.dp_max, block_valid,
                                  nl=nl)
+    return TreeIndex(index, lo, hi, valid)
+
+
+def widen_tree(tree: TreeIndex, index: BlockIndex, blocks: Array,
+               dp_rows: Array) -> TreeIndex:
+    """Conservatively widen the node interval caches along the root-to-leaf
+    paths of freshly inserted rows (the online mutation path, DESIGN.md
+    §3.9).
+
+    Args:
+      tree: the current :class:`TreeIndex` (its heap shape must match
+        ``index`` — shape-changing mutations rebuild the tree instead).
+      index: the post-insert :class:`BlockIndex` the widened tree serves.
+      blocks: [r] i32 block id of each inserted row.
+      dp_rows: [r, P] the inserted rows' pivot similarities.
+
+    Every node on an affected path has its ``[node_lo, node_hi]`` union
+    interval widened to contain the new rows' pivot similarities and is
+    marked valid.  Widening only ever *loosens* intervals, so every Eq. 13
+    node bound stays a true upper bound over its (grown) subtree — pruning
+    degrades gracefully, exactness is untouched.  Scatter-min/max handles
+    several inserts landing in the same block in one shot.
+    """
+    nl = tree.n_leaf_slots
+    lo, hi, valid = tree.node_lo, tree.node_hi, tree.node_valid
+    node = blocks.astype(jnp.int32) + nl
+    for _ in range(tree.n_levels + 1):        # leaf ... root, inclusive
+        lo = lo.at[node].min(dp_rows)
+        hi = hi.at[node].max(dp_rows)
+        valid = valid.at[node].set(True)
+        node = node // 2
     return TreeIndex(index, lo, hi, valid)
 
 
@@ -472,13 +503,11 @@ class TreeBackend:
         leaf_eval = self._resolve_leaf_eval(eng)
         if leaf_eval == "kernel" and prune and k <= eng.index.block_size:
             return None
-        tree = self._tree(eng)          # host-side build, outside the jit
+        self._tree(eng)                 # host-side build, outside the jit
         note = eng._note_trace
         margin, warm_start = eng.margin, eng.warm_start
         best_first, wsb = eng.best_first, eng.warm_start_blocks
         n_piv = eng.n_pivots
-        n_valid_rows = max(1, eng.n_valid)
-        n_valid_nodes = max(1, eng._tree_valid_nodes)
 
         @jax.jit
         def fused(index, tree, queries):
@@ -497,13 +526,21 @@ class TreeBackend:
                 "tree_levels": tree.n_levels,
             }
             if prune:
+                # denominators traced, not captured: online mutation widens
+                # the tree / flips validity without retracing this callee
+                n_valid_nodes = jnp.maximum(tree.node_valid.sum(), 1)
                 raw["tree_prune_frac"] = tree_pruned / (m * nb)
                 raw["tree_node_eval_frac"] = evals / (m * n_valid_nodes)
             if element_stats:
+                n_valid_rows = jnp.maximum(index.valid.sum(), 1)
                 raw["elem_prune_frac"] = elem_pruned / (m * n_valid_rows)
             return top_s, ids, raw
 
-        return lambda index, queries: fused(index, tree, queries)
+        # the tree is fetched PER CALL (not bound at make time): a
+        # shape-stable mutation swaps eng._tree_index for a widened twin
+        # with identical array shapes, so the cached executable is reused
+        # with the fresh arrays — no retrace, no stale intervals
+        return lambda index, queries: fused(index, self._tree(eng), queries)
 
     def run(self, eng, queries, k, *, prune=True, element_stats=False):
         tree = self._tree(eng)

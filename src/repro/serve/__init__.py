@@ -1,1 +1,5 @@
-"""subpackage."""
+"""Serving: kNN-LM datastore, decode engine, continuous-batching front end."""
+from repro.serve.frontend import ContinuousBatcher
+from repro.serve.knnlm import KNNDatastore
+
+__all__ = ["ContinuousBatcher", "KNNDatastore"]

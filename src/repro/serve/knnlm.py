@@ -8,9 +8,18 @@ turns neighbor similarities into a distribution with a temperature softmax,
 and interpolates:  p = (1-λ) p_LM + λ p_kNN.
 
 All lookups go through :class:`repro.search.SearchEngine`, so backend
-choice (scan / Pallas kernel / mesh-sharded datastore) is engine policy —
-pass ``backend=`` (default auto) or a ready-made engine; the old
-``use_kernel`` flag is gone.
+choice (scan / Pallas kernel / mesh-sharded datastore) is engine policy.
+The datastore is a thin value-table wrapper over an engine: construct it
+around a ready-made :class:`SearchEngine` (or a bare index, which gets
+wrapped), or let :meth:`from_pairs` / :meth:`from_corpus` route through
+``SearchEngine.build`` — one build surface for every entry point.
+
+The datastore is *online*: :meth:`add_pairs` appends (hidden, token)
+pairs to a live store through the engine's
+:class:`~repro.core.online.MutableIndex` handle, :meth:`delete` removes
+rows, and :meth:`frontend` wraps the engine in a continuous-batching
+:class:`~repro.serve.frontend.ContinuousBatcher` for request-at-a-time
+serving.
 """
 from __future__ import annotations
 
@@ -18,17 +27,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import BlockIndex, build_index
+from repro.core.index import BlockIndex
 from repro.models.lm import embed_hidden
 from repro.search import SearchEngine
+from repro.serve.frontend import ContinuousBatcher
 
 
 class KNNDatastore:
-    def __init__(self, index: BlockIndex, values: jnp.ndarray, vocab: int,
+    def __init__(self, index: BlockIndex | SearchEngine,
+                 values: jnp.ndarray, vocab: int,
                  *, k: int = 16, temp: float = 10.0, backend: str = "auto",
                  engine: SearchEngine | None = None):
-        self.engine = engine or SearchEngine(index, backend=backend)
-        self.values = values            # [n] int32 next-token ids
+        if engine is not None:
+            self.engine = engine
+        elif isinstance(index, SearchEngine):
+            self.engine = index
+        else:
+            self.engine = SearchEngine(index, backend=backend)
+        self.values = jnp.asarray(values, jnp.int32)  # [n] next-token ids
         self.vocab = vocab
         self.k = k
         self.temp = temp
@@ -40,11 +56,22 @@ class KNNDatastore:
     # ------------------------------------------------------------ building
     @classmethod
     def from_pairs(cls, embeddings: np.ndarray, next_tokens: np.ndarray,
-                   vocab: int, *, n_pivots: int = 16, block_size: int = 128,
-                   **kw) -> "KNNDatastore":
-        idx = build_index(jnp.asarray(embeddings, jnp.float32),
-                          n_pivots=n_pivots, block_size=block_size)
-        return cls(idx, jnp.asarray(next_tokens, jnp.int32), vocab, **kw)
+                   vocab: int, *, k: int = 16, temp: float = 10.0,
+                   backend: str = "auto", engine: SearchEngine | None = None,
+                   **build_kw) -> "KNNDatastore":
+        """Build a datastore from raw (embedding, next-token) pairs.
+
+        ``build_kw`` forwards to :meth:`SearchEngine.build` verbatim
+        (``n_pivots``, ``block_size``, ``mesh`` / ``distributed=True`` for
+        a sharded store, any engine knob) — the datastore has no build
+        path of its own.  Pass ``engine=`` to skip the build entirely.
+        """
+        if engine is None:
+            engine = SearchEngine.build(
+                jnp.asarray(embeddings, jnp.float32),
+                backend=backend, **build_kw)
+        return cls(engine, jnp.asarray(next_tokens, jnp.int32), vocab,
+                   k=k, temp=temp)
 
     @classmethod
     def from_corpus(cls, fns, params, batches, vocab: int, **kw):
@@ -58,6 +85,46 @@ class KNNDatastore:
             nxt.append(np.asarray(batch["tokens"][:, 1:]).reshape(-1))
         return cls.from_pairs(np.concatenate(embs), np.concatenate(nxt),
                               vocab, **kw)
+
+    # -------------------------------------------------------------- online
+    def add_pairs(self, embeddings, next_tokens) -> list[int]:
+        """Append (embedding, next-token) pairs to the live store.
+
+        Goes through the engine's online handle
+        (:meth:`SearchEngine.online`), so the next :meth:`lookup` sees
+        the new rows immediately — no rebuild, no retrace while the
+        block budget lasts.  Returns the new rows' external ids, which
+        index :attr:`values` directly (ids are append-ordered and stable
+        across :meth:`~repro.core.online.MutableIndex.reoptimize`, so
+        the value table never needs remapping).  Mutate the store only
+        through these methods: a bare ``engine.online().insert`` would
+        mint ids the value table does not cover.
+        """
+        toks = jnp.asarray(next_tokens, jnp.int32).reshape(-1)
+        ids = self.engine.online().insert(embeddings)
+        if len(ids) != toks.shape[0]:
+            raise ValueError(
+                f"{len(ids)} embeddings but {toks.shape[0]} next_tokens")
+        if ids and ids[0] != self.values.shape[0]:
+            raise RuntimeError(
+                f"value table has {self.values.shape[0]} rows but the "
+                f"engine minted id {ids[0]}; the engine was mutated "
+                "outside this datastore")
+        self.values = jnp.concatenate([self.values, toks])
+        return ids
+
+    def delete(self, ids) -> None:
+        """Tombstone-delete rows by external id.  Their value-table rows
+        become unreachable (a deleted row can never be returned by
+        ``lookup``) and are reclaimed at the next reoptimize."""
+        self.engine.online().delete(ids)
+
+    def frontend(self, *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0) -> ContinuousBatcher:
+        """A continuous-batching front end over this store's engine at
+        this store's ``k`` (see :mod:`repro.serve.frontend`)."""
+        return ContinuousBatcher(self.engine, self.k, max_batch=max_batch,
+                                 max_wait_ms=max_wait_ms)
 
     # ----------------------------------------------------------- inference
     def lookup(self, hidden: jnp.ndarray):

@@ -151,6 +151,36 @@ def test_n_pivots_joins_cache_signature(db, queries, backend):
     assert st3.retraces == 0
 
 
+@pytest.mark.parametrize("backend", ["scan", "tree", "kernel"])
+def test_online_mutation_cache_contract(db, queries, backend):
+    """ISSUE 8: shape-stable mutations (tail insert, tombstone delete)
+    keep every cached executable — the next search reports 0 retraces —
+    while a shape-changing mutation (appended blocks) bumps
+    ``index_epoch`` so the old entries (and their stale donated scratch
+    shapes) can never serve the grown index: exactly one retrace, then
+    warm again."""
+    eng = _engine(db[:500], backend)      # 12 free slots in the padded tail
+    h = eng.online(auto_reoptimize=False)
+    _, _, cold = eng.search(queries, K)
+    per_trace = cold.retraces
+    assert per_trace >= 1
+
+    epoch0 = eng.index_epoch
+    ids = h.insert(db[:3])                # fits in the padded tail
+    h.delete(ids[:1])
+    assert eng.index_epoch == epoch0      # shape-stable: same epoch
+    sims, _, st = eng.search(queries, K)
+    assert st.retraces == 0               # cache hit through the mutation
+    assert st.generation == 2
+
+    h.insert(np.tile(db, (2, 1)))         # overflows free slots -> grow
+    assert eng.index_epoch > epoch0
+    _, _, grown = eng.search(queries, K)
+    assert grown.retraces == per_trace    # exactly one new trace
+    _, _, warm = eng.search(queries, K)
+    assert warm.retraces == 0
+
+
 def test_brute_backend_reports_no_pivot_depth(db, queries):
     # brute consumes no bounds: the stats field is None, not a number that
     # suggests the cap was evaluated

@@ -5,14 +5,16 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ref
-from repro.core.index import build_index, reorder_perm, search, search_brute
+from repro.core.index import build_index, reorder_perm, search_brute
 from repro.core.vptree import VPTree
+from repro.search import SearchEngine
 from tests.conftest import clustered
 
 
 def _check_exact(db, q, k, **kw):
     idx = build_index(jnp.asarray(db), **kw)
-    s, i, stats = search(idx, jnp.asarray(q), k)
+    eng = SearchEngine(idx, backend="scan")
+    s, i, stats = eng.search(jnp.asarray(q), k)
     sref, iref = ref.brute_force_knn(q, db, k)
     np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
     # indices may permute on exact ties; compare as sets per row
@@ -52,7 +54,7 @@ def test_k_equals_n(rng):
     db = rng.normal(size=(40, 8)).astype(np.float32)
     q = rng.normal(size=(2, 8)).astype(np.float32)
     idx = build_index(jnp.asarray(db), n_pivots=4, block_size=16)
-    s, i, _ = search(idx, jnp.asarray(q), 40)
+    s, i, _ = SearchEngine(idx, backend="scan").search(jnp.asarray(q), 40)
     sref, iref = ref.brute_force_knn(q, db, 40)
     np.testing.assert_allclose(np.asarray(s), sref, atol=3e-5)
 
@@ -61,7 +63,8 @@ def test_brute_path_matches(rng):
     db = rng.normal(size=(300, 12)).astype(np.float32)
     q = rng.normal(size=(5, 12)).astype(np.float32)
     idx = build_index(jnp.asarray(db), n_pivots=4, block_size=64)
-    s1, i1, _ = search(idx, jnp.asarray(q), 7, prune=False)
+    s1, i1, _ = SearchEngine(idx, backend="scan").search(
+        jnp.asarray(q), 7, prune=False)
     s2, i2 = search_brute(idx, jnp.asarray(q), 7)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)
 
@@ -75,7 +78,7 @@ def test_exactness_property(n, d, k, seed):
     q = rng.normal(size=(4, d)).astype(np.float32)
     k = min(k, n)
     idx = build_index(jnp.asarray(db), n_pivots=min(4, n), block_size=32)
-    s, i, _ = search(idx, jnp.asarray(q), k)
+    s, i, _ = SearchEngine(idx, backend="scan").search(jnp.asarray(q), k)
     sref, _ = ref.brute_force_knn(q, db, k)
     np.testing.assert_allclose(np.asarray(s), sref, atol=5e-5)
 
@@ -125,20 +128,17 @@ def test_build_index_64_pivots_exact(rng):
     _check_exact(db, q, 8, n_pivots=64, block_size=64)
 
 
-def test_search_shim_rejects_engine_kwargs(rng):
-    """The deprecated shim must not swallow engine-level knobs: silently
-    ignoring warm_start/best_first would return stats the caller did not
-    ask for.  TypeError with the SearchEngine migration hint instead."""
+def test_search_shim_removed(rng):
+    """The pre-engine entry point no longer executes at all: after one
+    release as a DeprecationWarning shim it is a hard TypeError carrying
+    the SearchEngine migration hint (docs/search-api.md)."""
+    from repro.core.index import search
     db = rng.normal(size=(120, 8)).astype(np.float32)
     idx = build_index(jnp.asarray(db), n_pivots=4, block_size=32)
-    with pytest.raises(TypeError, match=r"warm_start.*SearchEngine"):
-        search(idx, jnp.asarray(db[:2]), 3, warm_start=True)
     with pytest.raises(TypeError, match="SearchEngine"):
-        search(idx, jnp.asarray(db[:2]), 3, backend="tree", best_first=False)
-    # the supported historical surface still works
-    s, i, stats = search(idx, jnp.asarray(db[:2]), 3, prune=True,
-                         element_stats=True)
-    assert s.shape == (2, 3) and "elem_prune_frac" in stats
+        search(idx, jnp.asarray(db[:2]), 3)
+    with pytest.raises(TypeError, match="docs/search-api.md"):
+        search(idx, jnp.asarray(db[:2]), 3, warm_start=True)
 
 
 def test_scalar_reference_pruned_knn(rng):

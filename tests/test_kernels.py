@@ -6,10 +6,20 @@ import pytest
 
 from repro.core import ref as cref
 from repro.core.index import build_index
-from repro.kernels import ops, ref as kref
+from repro.kernels import ref as kref
 from repro.kernels.bound_prune import block_bounds as bp_kernel
 from repro.kernels.cosine_topk import pruned_topk
+from repro.search.backends import kernel_search, map_row_ids, prep_queries
 from tests.conftest import clustered
+
+
+def _raw_kernel(idx, q, k, **kw):
+    """Fixed-policy kernel inner loop (the historical ``ops.search_index``
+    surface: no τ warm-start, natural block order) -> (sims, ids,
+    mean computed-tile fraction)."""
+    qn, qp = prep_queries(idx, jnp.asarray(q))
+    sims, pos, computed, _ = kernel_search(idx, qn, qp, k, **kw)
+    return sims, map_row_ids(idx.row_ids, pos), computed.mean()
 
 
 @pytest.mark.parametrize("m,nb,p", [(8, 4, 4), (37, 19, 12), (128, 64, 16),
@@ -33,7 +43,7 @@ def test_cosine_topk_sweep(n, d, k, bm, bn, rng):
     db = clustered(rng, n, d)
     q = clustered(rng, 40, d)
     idx = build_index(jnp.asarray(db), n_pivots=8, block_size=128)
-    s_k, i_k, frac = ops.search_index(idx, jnp.asarray(q), k, bm=bm, bn=bn)
+    s_k, i_k, frac = _raw_kernel(idx, q, k, bm=bm, bn=bn)
     sref, iref = cref.brute_force_knn(q, db, k)
     np.testing.assert_allclose(np.asarray(s_k), sref, atol=3e-5)
     got = np.sort(np.asarray(i_k), 1)
@@ -47,7 +57,7 @@ def test_cosine_topk_dtypes(dtype, rng):
     q = clustered(rng, 16, 32)
     idx = build_index(jnp.asarray(db), n_pivots=8, block_size=128)
     idx = idx._replace(db=idx.db.astype(dtype))
-    s_k, i_k, _ = ops.search_index(idx, jnp.asarray(q), 5, bm=16)
+    s_k, i_k, _ = _raw_kernel(idx, q, 5, bm=16)
     sref, _ = cref.brute_force_knn(q, db, 5)
     tol = 3e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(s_k), sref, atol=tol)
@@ -59,8 +69,8 @@ def test_pruning_engages_and_stays_exact(rng):
     q = db[rng.choice(4096, 128, replace=False)]
     q = (q + 0.02 * rng.normal(size=q.shape).astype(np.float32))
     idx = build_index(jnp.asarray(db), n_pivots=16, block_size=128)
-    s_p, i_p, frac_p = ops.search_index(idx, jnp.asarray(q), 5, bm=16)
-    s_n, i_n, frac_n = ops.search_index(idx, jnp.asarray(q), 5, bm=16, prune=False)
+    s_p, i_p, frac_p = _raw_kernel(idx, q, 5, bm=16)
+    s_n, i_n, frac_n = _raw_kernel(idx, q, 5, bm=16, prune=False)
     np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_n), atol=1e-6)
     assert float(frac_n) == 1.0
     assert float(frac_p) < 0.9, f"expected pruning, computed {float(frac_p)}"
@@ -70,11 +80,19 @@ def test_query_sort_improves_pruning(rng):
     db = clustered(rng, 4096, 32, n_centers=8, noise=0.04)
     q = clustered(rng, 256, 32, n_centers=8, noise=0.04)
     idx = build_index(jnp.asarray(db), n_pivots=16, block_size=128)
-    _, _, f_sorted = ops.search_index(idx, jnp.asarray(q), 5, bm=16,
-                                      sort_queries=True)
-    _, _, f_unsorted = ops.search_index(idx, jnp.asarray(q), 5, bm=16,
-                                        sort_queries=False)
+    _, _, f_sorted = _raw_kernel(idx, q, 5, bm=16, sort_queries=True)
+    _, _, f_unsorted = _raw_kernel(idx, q, 5, bm=16, sort_queries=False)
     assert float(f_sorted) <= float(f_unsorted) + 1e-6
+
+
+def test_ops_search_index_removed(rng):
+    """The deprecated wrapper is a hard error now, with the migration
+    hint — it must not silently fall through to a legacy policy."""
+    from repro.kernels import ops
+    db = clustered(rng, 256, 16)
+    idx = build_index(jnp.asarray(db), n_pivots=4, block_size=128)
+    with pytest.raises(TypeError, match="SearchEngine"):
+        ops.search_index(idx, jnp.asarray(db[:2]), 3)
 
 
 def test_raw_kernel_interface(rng):

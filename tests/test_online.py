@@ -1,0 +1,221 @@
+"""Online mutation (DESIGN.md §3.9): random interleavings of
+insert/delete/search stay tie-aware brute-equal on the *live* corpus for
+every backend, through the block-tail-full -> new-block transition and
+across full reoptimizes.  The correctness argument under test is
+conservative widening: inserts only loosen intervals (bounds stay true
+upper bounds), tombstones mask per row before top-k."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.search import SearchEngine
+
+BACKENDS = ["scan", "brute", "tree", "kernel"]
+ATOL = 3e-5
+
+
+def _norm64(x):
+    x = np.asarray(x, np.float64)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _check_live_exact(eng, live, q, k):
+    """Engine results == fp64 brute force over exactly the live rows.
+
+    Tie-aware: similarities must match the sorted brute values, and every
+    returned id must be live with a true similarity equal to the reported
+    one (so any permutation of exact ties passes, but a tombstoned or
+    hallucinated id never does)."""
+    sims, ids, _ = eng.search(jnp.asarray(q), k)
+    sims = np.asarray(sims, np.float64)
+    ids = np.asarray(ids)
+    live_ids = np.array(sorted(live))
+    rows = _norm64(np.stack([live[i] for i in live_ids]))
+    qn = _norm64(q)
+    s = qn @ rows.T                                     # [m, n_live]
+    kk = min(k, len(live_ids))
+    want = -np.sort(-s, axis=1)[:, :kk]
+    np.testing.assert_allclose(sims[:, :kk], want, atol=ATOL)
+    assert (ids[:, kk:] == -1).all(), "past-the-corpus slots must pad -1"
+    pos_of = {int(i): p for p, i in enumerate(live_ids)}
+    for r in range(q.shape[0]):
+        for c in range(kk):
+            i = int(ids[r, c])
+            assert i in pos_of, f"returned id {i} is not live"
+            true = s[r, pos_of[i]]
+            assert abs(true - sims[r, c]) < ATOL, (i, true, sims[r, c])
+
+
+def _build(rows, backend, **kw):
+    kw.setdefault("block_size", 32)
+    kw.setdefault("n_pivots", 4)
+    return SearchEngine.build(rows, backend=backend, **kw)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(BACKENDS), st.integers(0, 10_000))
+def test_interleaved_mutations_stay_exact(backend, seed):
+    rng = np.random.default_rng(seed)
+    n, d, k = 220, 12, 6
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    eng = _build(rows, backend)
+    h = eng.online(auto_reoptimize=False)
+    live = {i: rows[i] for i in range(n)}
+    q = rng.normal(size=(5, d)).astype(np.float32)
+    _check_live_exact(eng, live, q, k)    # warm call (tree builds here)
+    for _ in range(4):
+        op = int(rng.integers(0, 3))
+        if op == 0 or len(live) < k + 8:
+            new = rng.normal(size=(int(rng.integers(1, 9)), d)).astype(
+                np.float32)
+            for i, r in zip(h.insert(new), new):
+                live[i] = r
+        elif op == 1:
+            dead = rng.choice(sorted(live), size=5, replace=False)
+            h.delete([int(x) for x in dead])
+            for x in dead:
+                del live[int(x)]
+        else:
+            h.reoptimize()
+        _check_live_exact(eng, live, q, k)
+    assert h.generation == 4
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tail_full_to_new_block_transition(backend, rng):
+    """n a multiple of block_size -> zero free padded slots: the very
+    first insert must append a fresh block (shape change, epoch bump) and
+    stay exact; filling that block's tail exactly and inserting once more
+    crosses the boundary again."""
+    n, d, bs = 128, 8, 32
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    eng = _build(rows, backend, block_size=bs)
+    h = eng.online(auto_reoptimize=False)
+    live = {i: rows[i] for i in range(n)}
+    q = rng.normal(size=(3, d)).astype(np.float32)
+    _check_live_exact(eng, live, q, 4)
+    assert not h._free, "a full index must have no free slots"
+
+    epoch0 = eng.index_epoch
+    one = rng.normal(size=(1, d)).astype(np.float32)
+    live[h.insert(one)[0]] = one[0]
+    assert eng.index_epoch == epoch0 + 1          # grew by one block
+    assert eng.n_slots == (n // bs + 1) * bs
+    _check_live_exact(eng, live, q, 4)
+
+    tail = rng.normal(size=(bs - 1, d)).astype(np.float32)
+    for i, r in zip(h.insert(tail), tail):        # fills the block exactly
+        live[i] = r
+    assert eng.index_epoch == epoch0 + 1          # shape-stable fills
+    over = rng.normal(size=(2, d)).astype(np.float32)
+    for i, r in zip(h.insert(over), over):        # crosses into block n+2
+        live[i] = r
+    assert eng.index_epoch == epoch0 + 2
+    _check_live_exact(eng, live, q, 4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_search_after_delete_of_former_topk_member(backend, rng):
+    """Tombstone a row that was just returned as the top-1 neighbor: it
+    must vanish from the next result set immediately (no rebuild), with
+    the runner-up promoted — on every backend."""
+    n, d = 160, 8
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    eng = _build(rows, backend)
+    h = eng.online(auto_reoptimize=False)
+    live = {i: rows[i] for i in range(n)}
+    q = rows[17][None] + np.float32(0.01) * rng.normal(size=(1, d)).astype(
+        np.float32)
+    sims, ids, _ = eng.search(jnp.asarray(q), 3)
+    top1 = int(np.asarray(ids)[0, 0])
+    assert top1 == 17
+    h.delete([top1])
+    del live[top1]
+    sims2, ids2, _ = eng.search(jnp.asarray(q), 3)
+    assert top1 not in np.asarray(ids2)
+    _check_live_exact(eng, live, q, 3)
+
+
+def test_reoptimize_preserves_ids_and_repacks(rng):
+    n, d, bs = 96, 8, 32
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    eng = _build(rows, "scan", block_size=bs)
+    h = eng.online(auto_reoptimize=False)
+    live = {i: rows[i] for i in range(n)}
+    extra = rng.normal(size=(80, d)).astype(np.float32)
+    for i, r in zip(h.insert(extra), extra):
+        live[i] = r
+    dead = list(range(0, n, 2))
+    h.delete(dead)
+    for x in dead:
+        del live[x]
+    slots_before = eng.n_slots
+    assert h.decay_estimate > 0.5
+    h.reoptimize()
+    assert h.decay_estimate == 0.0
+    assert eng.n_slots <= slots_before            # tombstones reclaimed
+    assert h.n_live == len(live)
+    q = rng.normal(size=(4, d)).astype(np.float32)
+    _check_live_exact(eng, live, q, 5)            # same external ids
+    # ids minted after a reoptimize continue the sequence, no reuse
+    new = rng.normal(size=(1, d)).astype(np.float32)
+    (nid,) = h.insert(new)
+    assert nid == n + 80
+    live[nid] = new[0]
+    _check_live_exact(eng, live, q, 5)
+
+
+def test_auto_reoptimize_triggers_at_threshold(rng):
+    n, d = 64, 8
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    eng = _build(rows, "scan")
+    h = eng.online(reoptimize_threshold=0.25)
+    epoch0 = eng.index_epoch
+    h.insert(rng.normal(size=(n // 4 + 1, d)).astype(np.float32))
+    assert h.decay_estimate == 0.0                # rebuild already ran
+    assert eng.index_epoch > epoch0
+    assert eng.n_valid == n + n // 4 + 1
+
+
+def test_delete_unknown_id_raises_before_any_change(rng):
+    n, d = 64, 8
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    eng = _build(rows, "scan")
+    h = eng.online()
+    with pytest.raises(KeyError, match="not in the live set"):
+        h.delete([3, 99999])
+    assert 3 in h and h.n_live == n               # nothing was applied
+    with pytest.raises(KeyError, match="duplicate"):
+        h.delete([5, 5])
+    assert 5 in h
+
+
+def test_online_handle_is_singleton(rng):
+    rows = rng.normal(size=(64, 8)).astype(np.float32)
+    eng = _build(rows, "scan")
+    h = eng.online(auto_reoptimize=False)
+    assert eng.online() is h
+    with pytest.raises(ValueError, match="first call"):
+        eng.online(auto_reoptimize=True)
+
+
+def test_sharded_engine_refuses_mutation():
+    """The dist path has no insert placement protocol: ``.online()`` must
+    be an explicit NotImplementedError, not a silent local-shard write."""
+    from tests.test_distributed import _run
+    _run("""
+        import numpy as np, jax
+        from repro.search import SearchEngine
+        db = np.random.default_rng(0).normal(size=(512, 16)).astype("float32")
+        mesh = jax.make_mesh((8,), ("data",))
+        eng = SearchEngine.build(db, n_pivots=4, block_size=32, mesh=mesh)
+        assert eng.backend_name == "sharded"
+        try:
+            eng.online()
+        except NotImplementedError as e:
+            assert "sharded" in str(e)
+        else:
+            raise AssertionError("sharded engine accepted online()")
+        print("OK")
+    """)

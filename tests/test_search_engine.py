@@ -291,6 +291,12 @@ def test_stats_fraction_invariants(rng):
         _, _, noprune = eng.search(jnp.asarray(db[:5]), 6, prune=False)
         assert noprune.tree_prune_frac is None, backend
         assert noprune.tree_node_eval_frac is None, backend
+        # never-mutated engine: the online fields are None, not 0 — an
+        # engine that HAS an online handle reports real host numbers
+        assert stats.generation is None and stats.decay_estimate is None
+        eng.online(auto_reoptimize=False).insert(db[:1])
+        _, _, onl = eng.search(jnp.asarray(db[:5]), 6)
+        assert onl.generation == 1 and 0.0 < onl.decay_estimate <= 1.0
 
 
 def test_engine_build_convenience(rng):
