@@ -26,7 +26,12 @@ Rows (all microseconds unless named otherwise):
   ``sustained_qps`` and ``mutation_us`` are informational absolutes
   (host-dependent, like every ``*_us`` row); ``online_matches_brute``
   is a required hard gate — after every mutation step the search
-  results must equal fp64 brute force over exactly the live corpus.
+  results must equal fp64 brute force over exactly the live corpus;
+* ``latency/sharded_online/...`` — the same serve loop on a 4-shard
+  sharded engine (deterministic cross-host placement, DESIGN.md §3.10),
+  run in a child subprocess with its own virtual-device count, with a
+  per-shard reoptimize at the midpoint.
+  ``sharded_online_matches_brute`` is a required hard gate.
 
 Backends measured: ``brute`` (the no-index floor), ``base`` (flat scan,
 no warm start / best-first — the pre-engine pruned path), ``engine``
@@ -158,6 +163,7 @@ def run(*, quick: bool = False, regimes=("clustered", "uniform"),
                          _matches_brute(sims, db, q, k),
                          "exactness gate: must be 1.0"))
     rows.extend(run_online(quick=quick, seed=seed))
+    rows.extend(run_online_sharded(quick=quick, seed=seed))
     return rows
 
 
@@ -226,6 +232,99 @@ def run_online(*, quick: bool = False, seed: int = 0):
     ]
 
 
+def run_online_sharded(*, quick: bool = False, seed: int = 0):
+    """Sustained serving under mutation on a **sharded** engine
+    (DESIGN.md §3.10): the deterministic-placement twin of
+    :func:`run_online`, with a mid-run per-shard reoptimize.
+
+    The bench process is pinned to one device (and may share a session
+    with single-device engines), so the sharded run happens in a child
+    subprocess with its own ``--xla_force_host_platform_device_count=4``
+    — the same isolation tests/test_distributed.py uses.  The child
+    emits its rows as one JSON line; a crashed child reports the
+    ``sharded_online_matches_brute`` gate as 0.0 rather than silently
+    dropping the row.
+    """
+    import subprocess
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--sharded-online-child", "--seed", str(seed)]
+    if quick:
+        cmd.append("--quick")
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=900)
+    if out.returncode != 0:
+        return [("latency/sharded_online/sharded_online_matches_brute", 0.0,
+                 f"exactness gate: child subprocess failed rc={out.returncode}"
+                 f": {out.stderr.strip().splitlines()[-1] if out.stderr.strip() else 'no stderr'}")]
+    return [tuple(r) for r in json.loads(out.stdout.splitlines()[-1])]
+
+
+def _run_online_sharded_child(*, quick: bool, seed: int):
+    """Child-process body for :func:`run_online_sharded` (4 virtual
+    devices): interleave insert/delete batches with query microbatches on
+    a sharded engine, reoptimize at the midpoint, audit against fp64
+    brute force over exactly the live rows after every step."""
+    import jax
+    n, d = (1536, 32) if quick else (4096, 64)
+    steps = 6 if quick else 12
+    m, k, n_ins, n_del = 32, 10, 16, 4
+    rng = np.random.default_rng(seed + 3)
+    db = make_regime("clustered", n, d, seed)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    eng = SearchEngine.build(db, n_pivots=16, block_size=128, mesh=mesh)
+    assert eng.backend_name == "sharded"
+    h = eng.online(auto_reoptimize=False)
+    live = {i: db[i] for i in range(n)}
+
+    def draw_queries():
+        base = np.stack([live[int(i)] for i in
+                         rng.choice(sorted(live), m, replace=False)])
+        return ref.normalize(
+            base + 0.01 * rng.normal(size=base.shape)).astype(np.float32)
+
+    np.asarray(eng.search(jnp.asarray(draw_queries()), k)[0])  # compile
+    busy = mut_s = 0.0
+    n_queries = 0
+    exact = 1.0
+    for step in range(steps):
+        if step == steps // 2:
+            # repack + re-replication: a rebuild event, outside the
+            # steady-state clocks but inside the exactness audit
+            h.reoptimize()
+        new = rng.normal(size=(n_ins, d)).astype(np.float32)
+        dead = [int(x) for x in
+                rng.choice(sorted(live), size=n_del, replace=False)]
+        qs = [draw_queries() for _ in range(2)]
+        t0 = time.perf_counter()
+        ids = h.insert(new)
+        h.delete(dead)
+        mut_s += time.perf_counter() - t0
+        outs = [eng.search(jnp.asarray(q), k)[:2] for q in qs]
+        for s_, i_ in outs:
+            np.asarray(s_), np.asarray(i_)
+        busy += time.perf_counter() - t0
+        n_queries += len(qs) * m
+        for i, r in zip(ids, new):
+            live[i] = r
+        for x in dead:
+            del live[x]
+        live_rows = np.stack([live[i] for i in sorted(live)])
+        exact = min(exact,
+                    _matches_brute(outs[-1][0], live_rows, qs[-1], k))
+    return [
+        ("latency/sharded_online/sustained_qps", n_queries / busy,
+         f"{steps} steps x ({n_ins} ins + {n_del} del + {2 * m} queries), "
+         f"{jax.device_count()} shards, mid-run reoptimize; informational"),
+        ("latency/sharded_online/mutation_us", 1e6 * mut_s / (2 * steps),
+         "mean per sharded insert-or-delete call; informational"),
+        ("latency/sharded_online/sharded_online_matches_brute", exact,
+         "exactness gate vs live corpus after every step: must be 1.0"),
+    ]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="wall-clock latency baseline (BENCH_latency.json)")
@@ -236,7 +335,15 @@ def main(argv=None) -> int:
                     help="also write rows as JSON (BENCH_latency.json format)")
     ap.add_argument("--reps", type=int, default=None,
                     help="override timed reps per cell")
+    # internal entry point spawned by run_online_sharded
+    ap.add_argument("--sharded-online-child", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--seed", type=int, default=0, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+    if args.sharded_online_child:
+        rows = _run_online_sharded_child(quick=args.quick, seed=args.seed)
+        print(json.dumps([[n, float(v), t] for n, v, t in rows]))
+        return 0
     rows = run(quick=args.quick, reps=args.reps)
     for name, val, note in rows:
         print(f"{name},{val:.4f},{note}")

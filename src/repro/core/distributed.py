@@ -41,13 +41,21 @@ pivots were *always* shard-local (see §3.7: local pivots only loosen a
 shard's bounds relative to global pivots, and a loose bound can only
 under-prune, never cut a true neighbor).
 
-**Online mutation is not supported here.**  The single-shard engines are
-mutable through :class:`repro.core.online.MutableIndex` (DESIGN.md §3.9),
-but a sharded store has no well-defined insert without a cross-host row
-placement protocol (which shard owns the new row? who reassigns ids on a
-rebalance?), so ``SearchEngine.online()`` raises ``NotImplementedError``
-on sharded engines; rebuild via ``SearchEngine.build(distributed=True)``
-when the corpus changes.
+**Online mutation** (DESIGN.md §3.10): sharded engines are mutable through
+:class:`repro.core.online.ShardedMutableIndex`, obtained transparently via
+``SearchEngine.online()``.  The cross-host question — which shard owns a
+new row? — is answered by a *deterministic placement protocol*: external
+ids come from a replicated monotone counter and map to an owning shard
+round-robin by id, falling back to the least-loaded free list when the
+preferred shard's tail is full (appending one all-padding block to every
+shard when all tails are full, keeping the stacked shapes uniform).
+Placement is a pure function of replicated host state (the id → (shard,
+slot) map every process mirrors from the replicated ``row_ids``), so all
+processes decide identically with **zero extra collectives**; each process
+then applies only its own shards' slices through the vmapped masked
+scatters behind :func:`make_sharded_mutation`.  Widening (§3.9) holds
+shard-locally, and the merges never assumed anything about row placement,
+so search stays exact — see §3.10 for the full argument.
 """
 from __future__ import annotations
 
@@ -63,7 +71,8 @@ from repro.core.index import BlockIndex, build_index
 
 __all__ = ["build_sharded_index", "build_sharded_index_local",
            "local_shard_rows", "make_sharded_search", "sharded_search_local",
-           "place_sharded_index"]
+           "place_sharded_index", "make_sharded_mutation",
+           "replicated_row_ids"]
 
 
 def _build_shard_part(shard, n_valid: int, row_offset: int, *,
@@ -381,3 +390,180 @@ def place_sharded_index(index: BlockIndex, mesh: Mesh, axis_names=None) -> Block
     axis_names = tuple(axis_names or mesh.axis_names)
     sh = NamedSharding(mesh, P(axis_names))
     return jax.tree.map(lambda x: jax.device_put(x, sh), index)
+
+
+def replicated_row_ids(index: BlockIndex, mesh: Mesh) -> np.ndarray:
+    """Host copy of a stacked index's ``row_ids`` — ``[S, n_pad]`` int32.
+
+    The one replication the sharded online handle performs, at handle init
+    and after each :meth:`~repro.core.online.ShardedMutableIndex.reoptimize`
+    (both rebuild events, never the per-mutation hot path): multi-host
+    ``row_ids`` are not addressable outside jit, so an identity jit with
+    replicated ``out_shardings`` all-gathers them and every process reads
+    the same full copy off its first addressable shard.  From this mirror
+    each process derives the id → (shard, slot) map and the per-shard free
+    lists — the *replicated host state* the placement protocol is a pure
+    function of (DESIGN.md §3.10).
+    """
+    rid = index.row_ids
+    if isinstance(rid, jax.Array) and not rid.is_fully_addressable:
+        rep = jax.jit(lambda x: x,
+                      out_shardings=NamedSharding(mesh, P()))(rid)
+        return np.asarray(rep.addressable_shards[0].data)
+    return np.asarray(rid)
+
+
+class ShardedMutationOps:
+    """Jitted device-apply closures for one sharded engine's mutations.
+
+    Built once per online handle by :func:`make_sharded_mutation`.  Every
+    closure takes the stacked index (sharded ``P(axis)`` over the mesh)
+    plus small *replicated* per-shard update operands padded to a uniform
+    width R, and applies each shard's slice with vmapped masked scatters —
+    masked entries index the out-of-range sentinel and are dropped, so a
+    shard receiving fewer (or zero) rows this call is untouched.  All
+    outputs keep the index placement (``out_shardings``), so under GSPMD
+    each device scatters only into its local shard and the apply itself
+    needs no communication.
+
+    ``insert`` computes the new rows' pivot projections **on device, per
+    shard** (``rows @ pivots_s.T`` — multi-host processes cannot read other
+    shards' pivots host-side); the fp32 joint-table rows it writes differ
+    from the flat path's fp64-then-cast ones by ~1e-7, absorbed by
+    ``JOINT_SLACK`` like the stored-basis upcast error already is.
+    """
+
+    def __init__(self, mesh: Mesh, axis_names=None):
+        axis = _flat_axes(mesh, axis_names)
+        self.mesh = mesh
+        self.axis = axis
+        self.sharding = NamedSharding(mesh, P(axis))
+        sh = self.sharding
+
+        def _insert(index, slots, mask, rows, ids):
+            def one(idx, sl, mk, rw, di):
+                n_pad = idx.db.shape[0]
+                nb = idx.dp_min.shape[0]
+                bs = n_pad // nb
+                dp_new = rw @ idx.pivots.T                   # [R, P]
+                sl_s = jnp.where(mk, sl, n_pad)              # drop padding
+                blk = jnp.where(mk, sl // bs, nb)
+                new = idx._replace(
+                    db=idx.db.at[sl_s].set(rw, mode="drop"),
+                    dp=idx.dp.at[sl_s].set(dp_new, mode="drop"),
+                    valid=idx.valid.at[sl_s].set(True, mode="drop"),
+                    row_ids=idx.row_ids.at[sl_s].set(di, mode="drop"),
+                    dp_min=idx.dp_min.at[blk].min(dp_new, mode="drop"),
+                    dp_max=idx.dp_max.at[blk].max(dp_new, mode="drop"),
+                )
+                if idx.ortho is not None:
+                    beta = rw @ idx.ortho.T
+                    bnsq = jnp.cumsum(beta * beta, axis=1)
+                    new = new._replace(
+                        beta=idx.beta.at[sl_s].set(beta, mode="drop"),
+                        beta_nsq=idx.beta_nsq.at[sl_s].set(bnsq,
+                                                           mode="drop"))
+                return new, dp_new
+
+            return jax.vmap(one)(index, slots, mask, rows, ids)
+
+        def _delete(index, slots, mask):
+            def one(idx, sl, mk):
+                sl_s = jnp.where(mk, sl, idx.valid.shape[0])
+                return idx._replace(
+                    valid=idx.valid.at[sl_s].set(False, mode="drop"),
+                    row_ids=idx.row_ids.at[sl_s].set(-1, mode="drop"))
+
+            return jax.vmap(one)(index, slots, mask)
+
+        def _grow(index, *, n_add):
+            s = index.db.shape[0]
+            d = index.db.shape[2]
+            p = index.dp.shape[2]
+            bs = index.db.shape[1] // index.dp_min.shape[1]
+            nr = n_add * bs
+            zdp = jnp.zeros((s, nr, p), index.dp.dtype)
+            new = index._replace(
+                db=jnp.concatenate(
+                    [index.db, jnp.zeros((s, nr, d), index.db.dtype)], 1),
+                dp=jnp.concatenate([index.dp, zdp], 1),
+                valid=jnp.concatenate(
+                    [index.valid, jnp.zeros((s, nr), index.valid.dtype)], 1),
+                row_ids=jnp.concatenate(
+                    [index.row_ids, jnp.full((s, nr), -1, jnp.int32)], 1),
+                # empty-interval sentinel: the first insert records its
+                # exact min/max (same convention as the flat append path)
+                dp_min=jnp.concatenate(
+                    [index.dp_min,
+                     jnp.full((s, n_add, p), jnp.inf, index.dp_min.dtype)],
+                    1),
+                dp_max=jnp.concatenate(
+                    [index.dp_max,
+                     jnp.full((s, n_add, p), -jnp.inf, index.dp_max.dtype)],
+                    1),
+            )
+            if index.beta is not None:
+                new = new._replace(
+                    beta=jnp.concatenate([index.beta, zdp], 1),
+                    beta_nsq=jnp.concatenate([index.beta_nsq, zdp], 1))
+            return new
+
+        def _repack(index, *, n_pad_new):
+            def one(idx):
+                p = idx.dp.shape[1]
+                bs = idx.db.shape[0] // idx.dp_min.shape[0]
+                # build_index's reorder key: (nearest pivot asc, similarity
+                # to it desc), tombstones and padding grouped last
+                nearest = jnp.argmax(idx.dp, axis=1).astype(jnp.int32)
+                near_sim = jnp.max(idx.dp, axis=1)
+                group = jnp.where(idx.valid, nearest, p)
+                perm = jnp.lexsort((-near_sim, group))
+                db = idx.db[perm][:n_pad_new]
+                dp = idx.dp[perm][:n_pad_new]
+                valid = idx.valid[perm][:n_pad_new]
+                rid = jnp.where(valid, idx.row_ids[perm][:n_pad_new], -1)
+                nb2 = n_pad_new // bs
+                dmin = jnp.where(valid[:, None], dp,
+                                 jnp.inf).reshape(nb2, bs, p).min(axis=1)
+                dmax = jnp.where(valid[:, None], dp,
+                                 -jnp.inf).reshape(nb2, bs, p).max(axis=1)
+                new = idx._replace(db=db, dp=dp, valid=valid, row_ids=rid,
+                                   dp_min=dmin, dp_max=dmax)
+                if idx.beta is not None:
+                    new = new._replace(
+                        beta=idx.beta[perm][:n_pad_new],
+                        beta_nsq=idx.beta_nsq[perm][:n_pad_new])
+                return new
+
+            return jax.vmap(one)(index)
+
+        def _widen(tree, blocks, dp_rows, mask):
+            from repro.search.tree import widen_shard_trees
+            return widen_shard_trees(tree, blocks, dp_rows, mask)
+
+        self.insert = jax.jit(_insert, out_shardings=sh)
+        self.delete = jax.jit(_delete, out_shardings=sh)
+        self.grow = jax.jit(_grow, static_argnames="n_add", out_shardings=sh)
+        self.repack = jax.jit(_repack, static_argnames="n_pad_new",
+                              out_shardings=sh)
+        self.widen = jax.jit(_widen, out_shardings=sh)
+
+    def replicate(self, x) -> Array:
+        """Small host update operand -> replicated global device array."""
+        from repro.dist.compat import replicate_to_mesh
+        return replicate_to_mesh(np.asarray(x), self.mesh)
+
+
+def make_sharded_mutation(mesh: Mesh, axis_names=None) -> ShardedMutationOps:
+    """Build the jitted sharded-mutation closures for ``mesh``.
+
+    Called once per :class:`~repro.core.online.ShardedMutableIndex`; the
+    returned object's jit caches persist for the handle's lifetime, so
+    shape-stable mutations dispatch without retracing (the index is an
+    argument, exactly like the search closures).  Per-shard *repack*
+    (``reoptimize``) deliberately moves no row across shards and keeps each
+    shard's existing pivots: tightening intervals, dropping tombstones and
+    re-coherent block packing are all shard-local, which is what keeps the
+    rebuild collective-free (DESIGN.md §3.10).
+    """
+    return ShardedMutationOps(mesh, axis_names)

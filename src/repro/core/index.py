@@ -139,13 +139,12 @@ def build_index(
     nb = n_pad // block_size
     dp_min = dp_for_min.reshape(nb, block_size, -1).min(axis=1)
     dp_max = dp_for_max.reshape(nb, block_size, -1).max(axis=1)
-    # A fully-padded trailing block would carry +/-inf; clamp to a degenerate
-    # interval that yields upper bound <= -1 lets it always be pruned -- but
-    # simpler and safe: clamp to [1, -1]-style empty interval replaced by 0s;
-    # its rows are masked anyway, so use a neutral [0, 0].
-    empty = ~jnp.isfinite(dp_min)
-    dp_min = jnp.where(empty, 0.0, dp_min)
-    dp_max = jnp.where(empty, 0.0, dp_max)
+    # A fully-padded block keeps the +inf/-inf identity of the masked
+    # reduce: the *empty-interval sentinel*.  Every bound path maps an
+    # inverted interval (lo > hi) to a -inf upper bound, so empty blocks
+    # prune unconditionally, and — critically for the online path — an
+    # insert's scatter-min/max against the sentinel records the new row's
+    # EXACT interval instead of anchoring it at a neutral value.
 
     # Joint multi-pivot bound tables (float64 at build, float32 stored).
     # Computed on the *reordered* rows so beta[i] matches db[i]; maxmin
@@ -189,7 +188,12 @@ def interval_upper_bound(qp: Array, lo: Array, hi: Array) -> Array:
     """
     at_ends = jnp.maximum(ub_mult(qp, lo), ub_mult(qp, hi))
     inside = (qp >= lo) & (qp <= hi)
-    return jnp.where(inside, 1.0, at_ends)
+    ub = jnp.where(inside, 1.0, at_ends)
+    # inverted interval (lo > hi): the empty-block sentinel (+inf/-inf)
+    # written for all-padding blocks — no reachable similarity, bound -inf.
+    # (Raw ±inf through ub_mult yields NaN/+inf; jnp.where never leaks the
+    # unselected branch, so the sentinel is mapped before anyone reduces.)
+    return jnp.where(lo > hi, -jnp.inf, ub)
 
 
 def block_upper_bound(qp: Array, dp_min: Array, dp_max: Array) -> Array:

@@ -31,11 +31,14 @@ Mutations are classified by whether the pytree *shapes* change:
   ``index_epoch`` and drops its dispatch caches, so the next search
   pays exactly one retrace at the new shape.
 
-Sharded (multi-host / multi-device) engines are **not** mutable — each
-process only holds its local shard and a cross-host insert would need a
-placement protocol; :class:`MutableIndex` refuses them up front (build a
-fresh sharded engine via ``SearchEngine.build(distributed=True)``
-instead).
+Sharded (multi-host / multi-device) engines are mutable too, through
+:class:`ShardedMutableIndex` (``SearchEngine.online()`` picks the right
+handle automatically): external ids come from a replicated monotone
+counter, a deterministic placement protocol maps each id to an owning
+shard as a pure function of replicated host state (so every process
+decides identically with no extra collectives — DESIGN.md §3.10), and the
+widening machinery above is applied per shard through vmapped masked
+scatters (:func:`repro.core.distributed.make_sharded_mutation`).
 
 External row ids are stable across the handle's lifetime: the ids
 returned by :meth:`insert` (and the original ``0..n-1`` corpus ids)
@@ -51,13 +54,21 @@ import numpy as np
 
 from repro.core.index import BlockIndex, build_index
 
-__all__ = ["MutableIndex"]
+__all__ = ["MutableIndex", "ShardedMutableIndex"]
 
 
 def _append_blocks(index: BlockIndex, n_add: int) -> BlockIndex:
-    """Grow the index by ``n_add`` all-padding blocks (neutral ``[0, 0]``
-    intervals, ``valid`` False, ``row_ids`` -1) — a pure shape change; no
-    live row moves."""
+    """Grow the index by ``n_add`` all-padding blocks (``valid`` False,
+    ``row_ids`` -1) — a pure shape change; no live row moves.
+
+    New blocks carry the *empty-interval sentinel* ``dp_min = +inf,
+    dp_max = -inf``: every bound path maps an inverted interval to a -inf
+    upper bound (empty blocks prune unconditionally), and the insert
+    scatter-min/max against the sentinel records the first rows' EXACT
+    interval.  The old neutral ``[0, 0]`` seed permanently anchored every
+    appended block's interval at zero — a block whose rows all sit in e.g.
+    ``[0.6, 0.9]`` was stuck with the loose ``[0, 0.9]`` until reoptimize.
+    """
     bs = index.block_size
     nr = n_add * bs
     p = index.dp.shape[1]
@@ -71,9 +82,11 @@ def _append_blocks(index: BlockIndex, n_add: int) -> BlockIndex:
         row_ids=jnp.concatenate([index.row_ids,
                                  jnp.full((nr,), -1, jnp.int32)]),
         dp_min=jnp.concatenate([index.dp_min,
-                                jnp.zeros((n_add, p), index.dp_min.dtype)]),
+                                jnp.full((n_add, p), jnp.inf,
+                                         index.dp_min.dtype)]),
         dp_max=jnp.concatenate([index.dp_max,
-                                jnp.zeros((n_add, p), index.dp_max.dtype)]),
+                                jnp.full((n_add, p), -jnp.inf,
+                                         index.dp_max.dtype)]),
     )
     if index.beta is not None:
         new = new._replace(
@@ -105,12 +118,10 @@ class MutableIndex:
                  auto_reoptimize: bool = True):
         index = engine.index
         if engine.backend_name == "sharded" or index.db.ndim != 2:
-            raise NotImplementedError(
-                "online mutation is not supported for sharded engines: each "
-                "process holds only its local shard, and an insert would "
-                "need a cross-host placement protocol (see repro.core."
-                "distributed). Rebuild with SearchEngine.build(..., "
-                "distributed=True), or mutate a single-shard engine.")
+            raise TypeError(
+                "MutableIndex serves flat single-shard engines; sharded "
+                "engines are mutated through ShardedMutableIndex — "
+                "engine.online() picks the right handle automatically")
         self.engine = engine
         self.reoptimize_threshold = float(reoptimize_threshold)
         self.auto_reoptimize = bool(auto_reoptimize)
@@ -281,7 +292,25 @@ class MutableIndex:
         self._mutations_since_opt = 0
         self.generation += 1
         if live.size == 0:
-            # nothing to repack; keep the (all-padding) index as is
+            # no live rows: still go through _apply_mutation with a clean
+            # all-padding index (empty-interval sentinels, free pivots kept)
+            # so the stale widened tree / dispatch caches drop and
+            # index_epoch bumps exactly like every other reoptimize — an
+            # early return here left the engine serving dead caches
+            new = index._replace(
+                db=jnp.zeros_like(index.db),
+                dp=jnp.zeros_like(index.dp),
+                valid=jnp.zeros_like(index.valid),
+                row_ids=jnp.full_like(index.row_ids, -1),
+                dp_min=jnp.full_like(index.dp_min, jnp.inf),
+                dp_max=jnp.full_like(index.dp_max, -jnp.inf),
+            )
+            if index.beta is not None:
+                new = new._replace(beta=jnp.zeros_like(index.beta),
+                                   beta_nsq=jnp.zeros_like(index.beta_nsq))
+            self._id_pos = {}
+            self._free = list(range(index.db.shape[0] - 1, -1, -1))
+            eng._apply_mutation(new, n_valid=0, shape_changed=True)
             return
         ext_ids = row_ids[live].astype(np.int32)
         rows = np.asarray(index.db)[live]
@@ -303,3 +332,231 @@ class MutableIndex:
         if (self.auto_reoptimize
                 and self.decay_estimate >= self.reoptimize_threshold):
             self.reoptimize()
+
+
+class ShardedMutableIndex(MutableIndex):
+    """Insert/delete/reoptimize handle over a *sharded* ``SearchEngine``.
+
+    Same public surface and widening semantics as :class:`MutableIndex`,
+    plus the cross-host row-placement protocol (DESIGN.md §3.10):
+
+    * every process mirrors the same host state — the id → (shard, slot)
+      map and per-shard descending free lists, derived once from the
+      replicated ``row_ids`` (:func:`~repro.core.distributed.
+      replicated_row_ids`) — and the external-id counter is monotone over
+      it, so id allocation is replicated by construction;
+    * a new row's owning shard is a *pure function* of that state:
+      round-robin by id (``id % S``), falling back to the shard with the
+      most free slots (ties → lowest shard id) when the preferred tail is
+      full, and appending one all-padding block to EVERY shard (stacked
+      shapes stay uniform) when all tails are full.  Rows place one at a
+      time so the free lists evolve deterministically — every process
+      computes the identical placement with zero extra collectives;
+    * the device apply is shard-local: uniform-width update operands are
+      replicated and each shard's slice lands via vmapped masked scatters
+      (:func:`~repro.core.distributed.make_sharded_mutation`), including
+      per-shard interval widening, joint-table rows, and — when the
+      sharded tree is live — per-shard ``widen_tree``.
+
+    :meth:`reoptimize` repacks **within** shards (drop tombstones, restore
+    angular block coherence, re-tighten every interval from live rows)
+    under each shard's existing pivots; no row moves across shards and no
+    pivot is reselected, which is what keeps the rebuild collective-free
+    apart from the one ``row_ids`` re-replication.
+
+    Multi-process contract: mutation calls must be made identically on
+    every process (same rows, same order) — the same SPMD discipline
+    every other call in a multi-host program already follows.
+    """
+
+    def __init__(self, engine, *, reoptimize_threshold: float = 0.5,
+                 auto_reoptimize: bool = True):
+        index = engine.index
+        if index.db.ndim != 3 or engine.mesh is None:
+            raise TypeError(
+                "ShardedMutableIndex needs a shard-stacked index and a "
+                "mesh; flat engines are mutated through MutableIndex — "
+                "engine.online() picks the right handle automatically")
+        from repro.core.distributed import (make_sharded_mutation,
+                                            replicated_row_ids)
+        self.engine = engine
+        self.reoptimize_threshold = float(reoptimize_threshold)
+        self.auto_reoptimize = bool(auto_reoptimize)
+        self.generation = 0
+        self._mutations_since_opt = 0
+        self._ops = make_sharded_mutation(engine.mesh, engine.axis_names)
+        self._sync_mirrors(replicated_row_ids(index, engine.mesh))
+        self._next_id = max(self._id_pos, default=-1) + 1
+        self._rows_at_opt = max(1, len(self._id_pos))
+
+    def _sync_mirrors(self, row_ids: np.ndarray) -> None:
+        """Rebuild the replicated host mirrors from a ``[S, n_pad]``
+        ``row_ids`` copy: ``_id_pos`` maps external id → (shard, slot),
+        ``_free[s]`` is shard ``s``'s free slots, descending so ``pop()``
+        hands out the lowest slot first (packed toward block fronts, like
+        the flat handle)."""
+        self._id_pos = {}
+        self._free = []
+        for s in range(row_ids.shape[0]):
+            rid = row_ids[s]
+            for slot in np.flatnonzero(rid >= 0):
+                self._id_pos[int(rid[slot])] = (s, int(slot))
+            self._free.append(
+                sorted(np.flatnonzero(rid < 0).tolist(), reverse=True))
+
+    # -------------------------------------------------------------- insert
+    def insert(self, rows) -> list[int]:
+        """Insert ``rows`` ([n, d] or [d]); returns their external ids.
+
+        Placement (shard + slot per row) is decided host-side from the
+        replicated mirrors *before* any device work; the apply is one
+        vmapped masked scatter per table.  Appending blocks (all tails
+        full) is a shape change — every shard grows together and the next
+        search retraces once; otherwise the mutation is shape-stable and
+        the cached sharded executables keep serving at zero retraces.
+        """
+        rows64 = np.asarray(rows, np.float64)
+        if rows64.ndim == 1:
+            rows64 = rows64[None, :]
+        n_new = rows64.shape[0]
+        if n_new == 0:
+            return []
+        eng = self.engine
+        index = eng.index
+        n_shards, n_pad, d = index.db.shape
+        if rows64.shape[1] != d:
+            raise ValueError(
+                f"inserted rows have dim {rows64.shape[1]}, "
+                f"index has dim {d}")
+        norms = np.linalg.norm(rows64, axis=1, keepdims=True)
+        rows64 = rows64 / np.where(norms == 0.0, 1.0, norms)
+        bs = n_pad // index.dp_min.shape[1]
+        ids = list(range(self._next_id, self._next_id + n_new))
+
+        # ---- placement: a pure function of the replicated host mirrors
+        n_add = 0
+        placements = []
+        for rid in ids:
+            s = rid % n_shards
+            if not self._free[s]:
+                # least-loaded fallback: most free slots, ties lowest shard
+                s2 = max(range(n_shards),
+                         key=lambda j: (len(self._free[j]), -j))
+                if self._free[s2]:
+                    s = s2
+                else:
+                    # all tails full: append one block to EVERY shard
+                    base = n_pad + n_add * bs
+                    for fl in self._free:
+                        fl.extend(range(base + bs - 1, base - 1, -1))
+                    n_add += 1
+                    s = rid % n_shards
+            placements.append((s, self._free[s].pop()))
+        shape_changed = n_add > 0
+        if shape_changed:
+            index = self._ops.grow(index, n_add=n_add)
+
+        # ---- uniform-width per-shard update operands (replicated)
+        per_shard = [[] for _ in range(n_shards)]
+        for (s, slot), rid, row in zip(placements, ids, rows64):
+            per_shard[s].append((slot, rid, row))
+        width = max(len(v) for v in per_shard)
+        slots = np.zeros((n_shards, width), np.int32)
+        mask = np.zeros((n_shards, width), bool)
+        ids_arr = np.full((n_shards, width), -1, np.int32)
+        rows_arr = np.zeros((n_shards, width, d), np.float32)
+        for s, entries in enumerate(per_shard):
+            for j, (slot, rid, row) in enumerate(entries):
+                slots[s, j] = slot
+                mask[s, j] = True
+                ids_arr[s, j] = rid
+                rows_arr[s, j] = row
+        rep = self._ops.replicate
+        mask_r = rep(mask)
+        new_index, dp_new = self._ops.insert(
+            index, rep(slots), mask_r, rep(rows_arr), rep(ids_arr))
+
+        shard_tree = None
+        if not shape_changed and eng._shard_tree is not None:
+            shard_tree = self._ops.widen(
+                eng._shard_tree, rep((slots // bs).astype(np.int32)),
+                dp_new, mask_r)
+
+        for rid, loc in zip(ids, placements):
+            self._id_pos[rid] = loc
+        self._next_id += n_new
+        self.generation += 1
+        self._mutations_since_opt += n_new
+        eng._apply_mutation(new_index, n_valid=len(self._id_pos),
+                            shape_changed=shape_changed,
+                            shard_tree=shard_tree)
+        self._maybe_reoptimize()
+        return ids
+
+    # -------------------------------------------------------------- delete
+    def delete(self, ids) -> None:
+        """Tombstone-delete rows by external id (semantics of
+        :meth:`MutableIndex.delete`, applied to each row's owning shard).
+        """
+        if isinstance(ids, (int, np.integer)):
+            ids = [ids]
+        ids = [int(i) for i in ids]
+        if not ids:
+            return
+        bad = [i for i in ids if i not in self._id_pos]
+        if bad:
+            raise KeyError(
+                f"row ids {bad} are not in the live set (never inserted, "
+                f"or already deleted)")
+        if len(set(ids)) != len(ids):
+            raise KeyError(f"duplicate row ids in delete: {ids}")
+        eng = self.engine
+        n_shards = eng.index.db.shape[0]
+        locs = [self._id_pos.pop(i) for i in ids]
+        per_shard = [[] for _ in range(n_shards)]
+        for s, slot in locs:
+            per_shard[s].append(slot)
+            self._free[s].append(slot)
+        for s in {s for s, _ in locs}:
+            self._free[s].sort(reverse=True)
+        width = max(len(v) for v in per_shard)
+        slots = np.zeros((n_shards, width), np.int32)
+        mask = np.zeros((n_shards, width), bool)
+        for s, sl in enumerate(per_shard):
+            slots[s, :len(sl)] = sl
+            mask[s, :len(sl)] = True
+        rep = self._ops.replicate
+        new_index = self._ops.delete(eng.index, rep(slots), rep(mask))
+        self.generation += 1
+        self._mutations_since_opt += len(ids)
+        eng._apply_mutation(new_index, n_valid=len(self._id_pos),
+                            shape_changed=False)
+        self._maybe_reoptimize()
+
+    # ---------------------------------------------------------- reoptimize
+    def reoptimize(self) -> None:
+        """Per-shard repack: drop tombstones, restore angular block
+        coherence (build_index's reorder key under each shard's existing
+        pivots), recompute every interval from live rows only, and shrink
+        the common padded size to fit the fullest shard.  External ids are
+        preserved (rows carry them through the permutation); no row moves
+        across shards and no pivot is reselected.  A shape change: caches
+        drop, next search retraces once.  Works uniformly down to the
+        empty live set (one all-padding block per shard)."""
+        eng = self.engine
+        index = eng.index
+        from repro.core.distributed import replicated_row_ids
+        self._rows_at_opt = max(1, len(self._id_pos))
+        self._mutations_since_opt = 0
+        self.generation += 1
+        n_shards, n_pad, _ = index.db.shape
+        bs = n_pad // index.dp_min.shape[1]
+        per_live = np.zeros(n_shards, np.int64)
+        for s, _ in self._id_pos.values():
+            per_live[s] += 1
+        max_live = int(per_live.max()) if self._id_pos else 0
+        n_pad_new = max(bs, -(-max_live // bs) * bs)
+        new_index = self._ops.repack(index, n_pad_new=n_pad_new)
+        self._sync_mirrors(replicated_row_ids(new_index, eng.mesh))
+        eng._apply_mutation(new_index, n_valid=len(self._id_pos),
+                            shape_changed=True)

@@ -47,6 +47,10 @@ def _interval_ub(qp_ref, lo_ref, hi_ref):
     ub_l = a * l + jnp.sqrt(rad_a * jnp.maximum(0.0, 1.0 - l * l))
     ub_h = a * h + jnp.sqrt(rad_a * jnp.maximum(0.0, 1.0 - h * h))
     per_pivot = jnp.where((a >= l) & (a <= h), 1.0, jnp.maximum(ub_l, ub_h))
+    # inverted interval (l > h): the empty-block sentinel — bound is -inf
+    # (keeps this kernel value-identical to kref.block_bounds on indexes
+    # that carry all-padding blocks from online mutation)
+    per_pivot = jnp.where(l > h, -jnp.inf, per_pivot)
     return per_pivot.min(axis=-1)                 # [BM, BB]
 
 

@@ -77,6 +77,10 @@ def _make_kernel(k: int, bm: int, bn: int, margin: float, prune: bool,
         ub_l = qp * lo + jnp.sqrt(rad_q * jnp.maximum(0.0, 1.0 - lo * lo))
         ub_h = qp * hi + jnp.sqrt(rad_q * jnp.maximum(0.0, 1.0 - hi * hi))
         per_p = jnp.where((qp >= lo) & (qp <= hi), 1.0, jnp.maximum(ub_l, ub_h))
+        # empty-block sentinel (lo=+inf > hi=-inf, all rows invalid): the
+        # raw formula yields NaN (qp=0) or +inf here.  Both are safe —
+        # NaN >= tau is False so the tile skips; +inf computes the tile and
+        # vmask masks every row.  No explicit branch needed in-kernel.
         ub = per_p.min(axis=-1)                           # [BM]
         if use_cap:
             # extra pivot-similarity operand: the precomputed joint

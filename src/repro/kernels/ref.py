@@ -36,6 +36,11 @@ def block_bounds(qp: Array, dp_min: Array, dp_max: Array) -> Array:
     at_ends = jnp.maximum(ub_lo, ub_hi)
     inside = (qp >= lo) & (qp <= hi)
     per_pivot = jnp.where(inside, 1.0, at_ends)
+    # lo > hi is the empty-block sentinel (+inf/-inf for all-padding
+    # blocks): no reachable similarity, so the bound is -inf and the block
+    # prunes unconditionally instead of leaking NaN/+inf from the raw
+    # formula above.
+    per_pivot = jnp.where(lo > hi, -jnp.inf, per_pivot)
     return per_pivot.min(axis=-1)                 # [M, NB]
 
 

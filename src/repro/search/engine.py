@@ -332,10 +332,16 @@ class SearchEngine:
         through it — the engine's index, tree and dispatch caches stay
         consistent automatically.  Keyword args (``reoptimize_threshold``,
         ``auto_reoptimize``) are forwarded on first creation only.
+
+        Sharded engines get a :class:`~repro.core.online.
+        ShardedMutableIndex` — same surface, plus the deterministic
+        cross-host row-placement protocol (DESIGN.md §3.10).
         """
         if self._online is None:
-            from repro.core.online import MutableIndex
-            self._online = MutableIndex(self, **kw)
+            from repro.core.online import MutableIndex, ShardedMutableIndex
+            cls = (ShardedMutableIndex if self.index.db.ndim == 3
+                   else MutableIndex)
+            self._online = cls(self, **kw)
         elif kw:
             raise ValueError(
                 "engine.online() already created its MutableIndex; "
@@ -344,16 +350,24 @@ class SearchEngine:
 
     def _apply_mutation(self, new_index: BlockIndex, *, n_valid: int,
                         shape_changed: bool, tree=None,
-                        tree_valid_nodes: int | None = None) -> None:
-        """Install a mutated index (called by
-        :class:`~repro.core.online.MutableIndex` only).
+                        tree_valid_nodes: int | None = None,
+                        shard_tree=None) -> None:
+        """Install a mutated index (called by the
+        :mod:`~repro.core.online` handles only).
 
         Shape-stable mutations keep every cached executable: the index is
         an *argument* of the fused callees, so fresh arrays of the same
         shape flow through the compiled code with zero retraces.  Shape
         changes (appended blocks, reoptimize) bump ``index_epoch``, drop
         the dispatch caches (their donated scratch buffers carry the old
-        shapes) and invalidate the lazily built tree.
+        shapes) and invalidate the lazily built trees.
+
+        ``tree`` / ``shard_tree`` carry the conservatively widened flat
+        :class:`~repro.search.tree.TreeIndex` / stacked
+        :class:`~repro.search.tree.ShardTreeArrays` twin for shape-stable
+        inserts under a live tree.  Sharded deletes need no refresh at
+        all: ``ShardTreeArrays`` does not embed the index, so the wide
+        node caches keep serving the new index arrays as-is.
         """
         self.index = new_index
         self.n_valid = int(n_valid)
@@ -367,7 +381,10 @@ class SearchEngine:
             self.n_blocks = int(new_index.dp_min.shape[-2])
             self.n_slots = int(new_index.db.shape[-2]) * (
                 int(new_index.db.shape[0]) if new_index.db.ndim == 3 else 1)
-        elif tree is not None:
+            return
+        if shard_tree is not None:
+            self._shard_tree = shard_tree
+        if tree is not None:
             self._tree_index = tree
             if tree_valid_nodes is not None:
                 self._tree_valid_nodes = int(tree_valid_nodes)

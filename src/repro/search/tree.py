@@ -53,7 +53,7 @@ from repro.search import backends as _bk
 
 __all__ = ["TreeIndex", "ShardTreeArrays", "build_tree", "build_shard_trees",
            "tree_warm_start", "tree_warm_start_topk", "tree_descend",
-           "tree_search", "widen_tree"]
+           "tree_search", "widen_tree", "widen_shard_trees"]
 
 
 class TreeIndex(NamedTuple):
@@ -121,11 +121,11 @@ def _tree_arrays(dp_min: Array, dp_max: Array, block_valid: Array, *, nl: int):
         hi = hi.at[sz:2 * sz].set(c_hi.max(axis=1))
         valid = valid.at[sz:2 * sz].set(c_va.any(axis=1))
         sz //= 2
-    # empty subtrees carry ±inf from the masked reduce: neutralize to the
-    # same degenerate [0, 0] interval build_index uses (they are masked by
-    # node_valid everywhere the bound is consumed)
-    lo = jnp.where(jnp.isfinite(lo), lo, 0.0)
-    hi = jnp.where(jnp.isfinite(hi), hi, 0.0)
+    # empty subtrees keep the ±inf identity of the masked reduce — the same
+    # empty-interval sentinel build_index writes for all-padding blocks.
+    # Bound paths map an inverted interval to -inf (and node_valid masks
+    # these nodes anyway), while widen_tree's scatter-min/max records the
+    # first insert's EXACT interval instead of re-anchoring it at zero.
     return lo, hi, valid
 
 
@@ -177,6 +177,46 @@ def widen_tree(tree: TreeIndex, index: BlockIndex, blocks: Array,
         valid = valid.at[node].set(True)
         node = node // 2
     return TreeIndex(index, lo, hi, valid)
+
+
+def widen_shard_trees(tree: "ShardTreeArrays", blocks: Array,
+                      dp_rows: Array, mask: Array) -> "ShardTreeArrays":
+    """Per-shard :func:`widen_tree`: conservatively widen every shard's
+    node caches along the root-to-leaf paths of its freshly inserted rows
+    (the sharded online mutation path, DESIGN.md §3.10).
+
+    Args:
+      tree: shard-stacked node caches ``[S, 2·nl, P]`` / ``[S, 2·nl]``.
+      blocks: [S, R] i32 per-shard block ids of the inserted rows, padded
+        to a uniform width R across shards.
+      dp_rows: [S, R, P] the rows' LOCAL pivot similarities (each shard's
+        own pivots — the quantities its intervals cache).
+      mask: [S, R] bool, False for the padding entries of short shards.
+
+    Masked entries scatter to the out-of-range sentinel node ``2·nl`` and
+    are dropped, so shards receiving fewer (or zero) rows this call stay
+    untouched.  The widening argument is the flat one, applied per shard:
+    every affected node's union interval grows to contain the new rows'
+    similarities, so each shard's transitive Eq. 13 bounds stay true upper
+    bounds over its (grown) subtrees.  Run under ``jit`` with the tree's
+    own ``out_shardings`` so each device widens only its local tree.
+    """
+    two_nl = tree.node_valid.shape[1]
+    nl = two_nl // 2
+    levels = nl.bit_length() - 1
+
+    def one(lo, hi, valid, blk, dp, mk):
+        node = jnp.where(mk, blk.astype(jnp.int32) + nl, two_nl)
+        for _ in range(levels + 1):        # leaf ... root, inclusive
+            lo = lo.at[node].min(dp, mode="drop")
+            hi = hi.at[node].max(dp, mode="drop")
+            valid = valid.at[node].set(True, mode="drop")
+            node = jnp.where(mk, node // 2, two_nl)
+        return lo, hi, valid
+
+    lo, hi, valid = jax.vmap(one)(tree.node_lo, tree.node_hi,
+                                  tree.node_valid, blocks, dp_rows, mask)
+    return ShardTreeArrays(lo, hi, valid)
 
 
 class ShardTreeArrays(NamedTuple):

@@ -63,6 +63,7 @@ class ContinuousBatcher:
         self._queue: asyncio.Queue = asyncio.Queue()
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._worker: asyncio.Task | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
         self._closed = False
 
     # ------------------------------------------------------------- metrics
@@ -87,12 +88,15 @@ class ContinuousBatcher:
             return
         self._closed = True
         if self._worker is not None:
-            await self._queue.join()
-            self._worker.cancel()
-            try:
-                await self._worker
-            except asyncio.CancelledError:
-                pass
+            if self._loop is asyncio.get_running_loop():
+                await self._queue.join()
+                self._worker.cancel()
+                try:
+                    await self._worker
+                except asyncio.CancelledError:
+                    pass
+            # else: the worker's loop already died (sequential asyncio.run
+            # reuse) and took the task with it — nothing left to drain
             self._worker = None
         self._pool.shutdown(wait=True)
 
@@ -105,10 +109,26 @@ class ContinuousBatcher:
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
             raise ValueError(f"submit takes one query [d], got {q.shape}")
+        loop = asyncio.get_running_loop()
+        if self._worker is not None and self._loop is not loop:
+            # the worker belongs to another event loop.  If that loop is
+            # still running this is genuine cross-loop use — refuse loudly.
+            # Otherwise the loop died (the common sequential-asyncio.run
+            # reuse): the old worker task and its queue are dead, and a
+            # submit enqueued onto them would hang forever — re-create
+            # both on the caller's loop (the executor thread is
+            # loop-agnostic and keeps the engine serialized throughout).
+            if self._loop is not None and self._loop.is_running():
+                raise RuntimeError(
+                    "batcher is already serving another running event "
+                    "loop; one ContinuousBatcher binds to one loop at a "
+                    "time")
+            self._worker = None
+            self._queue = asyncio.Queue()
         if self._worker is None:
-            self._worker = asyncio.get_running_loop().create_task(
-                self._run_worker())
-        fut = asyncio.get_running_loop().create_future()
+            self._loop = loop
+            self._worker = loop.create_task(self._run_worker())
+        fut = loop.create_future()
         self._queue.put_nowait((q, fut))
         return await fut
 

@@ -83,6 +83,85 @@ def test_multiprocess_permuted_axes_ownership():
         assert "ok" in out
 
 
+def test_multiprocess_online_placement_agreement():
+    """2 processes x 2 devices replay the same insert/delete/reoptimize
+    sequence on a distributed-build engine.  Placement is a pure function
+    of replicated host state (DESIGN.md §3.10) — each process prints a
+    digest of its OWN host-side id -> (shard, slot) mirror, decided with
+    zero extra collectives, and the digests must match across processes.
+    Post-mutation results must also match the fp64 brute oracle on the
+    live set."""
+    worker = """
+        import sys
+        pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+        sys.path.insert(0, {src!r})
+        from repro.dist.compat import multiprocess_cpu_init
+        multiprocess_cpu_init(f"127.0.0.1:{{port}}", nproc, pid)
+        import hashlib
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ref
+        from repro.core.distributed import local_shard_rows
+        from repro.search import SearchEngine
+        rng = np.random.default_rng(5)
+        db = ref.normalize(rng.normal(size=(211, 12))).astype(np.float32)
+        mesh = jax.make_mesh((4,), ("data",))
+        _, owned = local_shard_rows(211, mesh)
+        local = np.concatenate([db[a:b] for _, a, b in owned])
+        eng = SearchEngine.build(local, mesh=mesh, distributed=True,
+                                 global_rows=211, n_pivots=4, block_size=16)
+        h = eng.online(auto_reoptimize=False)
+        new = ref.normalize(rng.normal(size=(60, 12))).astype(np.float32)
+        live = {{i: db[i] for i in range(211)}}
+        for i_, r in zip(h.insert(new[:7]), new[:7]):
+            live[i_] = r
+        dead = list(range(0, 30, 3))
+        h.delete(dead)
+        for x in dead:
+            del live[x]
+        # 53 rows > the free lists: appends one block on every shard
+        for i_, r in zip(h.insert(new[7:]), new[7:]):
+            live[i_] = r
+        h.reoptimize()
+        extra = ref.normalize(rng.normal(size=(3, 12))).astype(np.float32)
+        for i_, r in zip(h.insert(extra), extra):
+            live[i_] = r
+        digest = hashlib.sha256(
+            str(sorted(h._id_pos.items())).encode()).hexdigest()
+        live_ids = np.array(sorted(live))
+        rows_live = np.stack([live[int(x)] for x in live_ids])
+        s, i, _ = eng.search(jnp.asarray(db[:3]), 5)
+        sref, iref = ref.brute_force_knn(db[:3], rows_live, 5)
+        assert np.allclose(np.asarray(s), sref, atol=3e-5)
+        assert (np.sort(np.asarray(i), 1)
+                == np.sort(live_ids[iref], 1)).all()
+        print("digest", digest, flush=True)
+        print("ok")
+    """
+    import socket
+    import textwrap
+    src = os.path.abspath(os.path.join(REPO, "src"))
+    code = textwrap.dedent(worker).format(src=src)
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", code, str(i), "2", str(port)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env) for i in range(2)]
+    outs = [p.communicate(timeout=600)[0] for p in procs]
+    digests = []
+    for p, out in zip(procs, outs):
+        assert p.returncode == 0, out
+        assert "ok" in out
+        digests += [ln.split()[1] for ln in out.splitlines()
+                    if ln.startswith("digest ")]
+    assert len(digests) == 2 and digests[0] == digests[1], digests
+
+
 def test_local_shard_rows_covers_datastore():
     """Single-process: the ownership helper tiles [0, n) exactly once, with
     the trailing short shard clamped."""

@@ -200,22 +200,229 @@ def test_online_handle_is_singleton(rng):
         eng.online(auto_reoptimize=True)
 
 
-def test_sharded_engine_refuses_mutation():
-    """The dist path has no insert placement protocol: ``.online()`` must
-    be an explicit NotImplementedError, not a silent local-shard write."""
+def test_appended_block_records_exact_interval(rng):
+    """Satellite regression (PR 9): appended blocks used to seed
+    ``dp_min = dp_max = 0`` and the insert's scatter-min/max anchored the
+    interval at zero forever.  With the empty-interval sentinel the first
+    rows record their EXACT per-pivot min/max."""
+    n, d, bs = 64, 8, 32
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    eng = _build(rows, "scan", block_size=bs)
+    h = eng.online(auto_reoptimize=False)
+    live = {i: rows[i] for i in range(n)}
+    assert not h._free, "a full index must have no free slots"
+
+    # rows clustered on pivot 0: their similarity to it is ~1, so the
+    # appended block's true dp_min for that pivot is strictly positive —
+    # the zero anchor of the pre-fix code is unambiguously wrong here
+    piv0 = np.asarray(eng.index.pivots)[0]
+    part = (piv0[None] + 0.01 * rng.normal(size=(3, d))).astype(np.float32)
+    for i, r in zip(h.insert(part), part):
+        live[i] = r
+    idx = eng.index
+    dp_tail = np.asarray(idx.dp)[n:n + 3]         # the 3 inserted rows
+    np.testing.assert_array_equal(np.asarray(idx.dp_min)[-1],
+                                  dp_tail.min(axis=0))
+    np.testing.assert_array_equal(np.asarray(idx.dp_max)[-1],
+                                  dp_tail.max(axis=0))
+    assert np.asarray(idx.dp_min)[-1, 0] > 0.5    # the anchor bug's tell
+
+    # fill the block exactly; the interval must stay the exact min/max
+    fill = (piv0[None] + 0.01 * rng.normal(size=(bs - 3, d))).astype(
+        np.float32)
+    for i, r in zip(h.insert(fill), fill):
+        live[i] = r
+    idx = eng.index
+    dp_tail = np.asarray(idx.dp)[n:n + bs]
+    np.testing.assert_array_equal(np.asarray(idx.dp_min)[-1],
+                                  dp_tail.min(axis=0))
+    np.testing.assert_array_equal(np.asarray(idx.dp_max)[-1],
+                                  dp_tail.max(axis=0))
+    q = rng.normal(size=(3, d)).astype(np.float32)
+    _check_live_exact(eng, live, q, 5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_delete_all_reoptimize_insert_round_trip(backend, rng):
+    """Satellite regression (PR 9): an empty-live-set ``reoptimize()``
+    returned before ``_apply_mutation``, so the engine kept its stale
+    widened tree / dispatch caches and ``index_epoch`` never bumped.  The
+    rebuild path is now uniform; the round trip must stay exact on every
+    backend."""
+    n, d, k = 96, 8, 4
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    eng = _build(rows, backend)
+    h = eng.online(auto_reoptimize=False)
+    q = rng.normal(size=(3, d)).astype(np.float32)
+    _check_live_exact(eng, {i: rows[i] for i in range(n)}, q, k)  # warm
+    h.delete(list(range(n)))
+    epoch0 = eng.index_epoch
+    h.reoptimize()
+    assert eng.index_epoch == epoch0 + 1, \
+        "empty reoptimize must bump the epoch like every other rebuild"
+    assert eng._tree_index is None and not eng._fn_cache
+    assert h.n_live == 0 and h.decay_estimate == 0.0
+    sims, ids, _ = eng.search(jnp.asarray(q), k)
+    assert (np.asarray(ids) == -1).all()
+    assert np.all(np.asarray(sims) == -np.inf)
+    new = rng.normal(size=(10, d)).astype(np.float32)
+    live = {i: r for i, r in zip(h.insert(new), new)}
+    _check_live_exact(eng, live, q, k)
+
+
+def test_sharded_interleaved_mutations_stay_exact():
+    """The tentpole, single-process: 8 virtual devices, random
+    insert/delete/reoptimize interleavings on ``sharded`` and
+    ``sharded_tree`` engines stay tie-aware brute-equal on the live
+    corpus, and the id → (shard, slot) mirror matches the device
+    ``row_ids`` across reoptimize."""
     from tests.test_distributed import _run
     _run("""
-        import numpy as np, jax
+        import numpy as np, jax, jax.numpy as jnp
         from repro.search import SearchEngine
-        db = np.random.default_rng(0).normal(size=(512, 16)).astype("float32")
+        from repro.core.distributed import replicated_row_ids
+
+        ATOL = 3e-5
+
+        def norm64(x):
+            x = np.asarray(x, np.float64)
+            return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+        def check(eng, live, q, k):
+            sims, ids, st = eng.search(jnp.asarray(q), k)
+            sims = np.asarray(sims, np.float64)
+            ids = np.asarray(ids)
+            live_ids = np.array(sorted(live))
+            s = norm64(q) @ norm64(np.stack([live[i] for i in live_ids])).T
+            kk = min(k, len(live_ids))
+            want = -np.sort(-s, axis=1)[:, :kk]
+            np.testing.assert_allclose(sims[:, :kk], want, atol=ATOL)
+            assert (ids[:, kk:] == -1).all()
+            pos = {int(i): p for p, i in enumerate(live_ids)}
+            for r in range(q.shape[0]):
+                for c in range(kk):
+                    i = int(ids[r, c])
+                    assert i in pos, f"returned id {i} is not live"
+                    assert abs(s[r, pos[i]] - sims[r, c]) < ATOL
+            return st
+
         mesh = jax.make_mesh((8,), ("data",))
-        eng = SearchEngine.build(db, n_pivots=4, block_size=32, mesh=mesh)
-        assert eng.backend_name == "sharded"
-        try:
-            eng.online()
-        except NotImplementedError as e:
-            assert "sharded" in str(e)
-        else:
-            raise AssertionError("sharded engine accepted online()")
+        for tree_shards in (False, True):
+            for seed in (0, 1):
+                rng = np.random.default_rng(seed)
+                n, d, k = 603, 16, 7
+                rows = rng.normal(size=(n, d)).astype(np.float32)
+                eng = SearchEngine.build(rows, mesh=mesh, n_pivots=4,
+                                         block_size=16,
+                                         tree_shards=tree_shards)
+                assert eng.backend_name == "sharded"
+                h = eng.online(auto_reoptimize=False)
+                live = {i: rows[i] for i in range(n)}
+                q = rng.normal(size=(4, d)).astype(np.float32)
+                check(eng, live, q, k)          # warm: compile the closure
+                for _ in range(5):
+                    op = int(rng.integers(0, 3))
+                    if op == 0 or len(live) < k + 16:
+                        m = int(rng.integers(1, 12))
+                        new = rng.normal(size=(m, d)).astype(np.float32)
+                        for i, r in zip(h.insert(new), new):
+                            live[i] = r
+                    elif op == 1:
+                        dead = rng.choice(sorted(live), size=7,
+                                          replace=False)
+                        h.delete([int(x) for x in dead])
+                        for x in dead:
+                            del live[int(x)]
+                    else:
+                        h.reoptimize()
+                        rid = replicated_row_ids(eng.index, mesh)
+                        want = {int(r): (s2, sl)
+                                for s2 in range(rid.shape[0])
+                                for sl, r in enumerate(rid[s2]) if r >= 0}
+                        assert want == h._id_pos, "id map drifted"
+                    check(eng, live, q, k)
+                assert h.generation == 5
+        print("OK")
+    """)
+
+
+def test_sharded_shape_stable_mutations_run_at_zero_retraces():
+    """Shape-stable sharded mutations must keep the cached sharded
+    executables (index flows as an argument): the search right after a
+    tail insert or a tombstone delete reports ``retraces == 0``, on both
+    the flat per-shard scan and the per-shard tree descent.  Growing a
+    block bumps the epoch instead."""
+    from tests.test_distributed import _run
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.search import SearchEngine
+        rng = np.random.default_rng(7)
+        n, d, k = 500, 16, 6
+        rows = rng.normal(size=(n, d)).astype(np.float32)
+        mesh = jax.make_mesh((8,), ("data",))
+        for tree_shards in (False, True):
+            eng = SearchEngine.build(rows, mesh=mesh, n_pivots=4,
+                                     block_size=16,
+                                     tree_shards=tree_shards)
+            h = eng.online(auto_reoptimize=False)
+            q = rng.normal(size=(3, d)).astype(np.float32)
+            eng.search(q, k)                       # compile
+            _, _, st = eng.search(q, k)
+            assert st.retraces == 0
+            epoch0 = eng.index_epoch
+            ids = h.insert(rng.normal(size=(4, d)).astype(np.float32))
+            assert eng.index_epoch == epoch0       # free tail slots exist
+            _, _, st = eng.search(q, k)
+            assert st.retraces == 0, (tree_shards, "insert", st.retraces)
+            h.delete(ids[:2])
+            _, _, st = eng.search(q, k)
+            assert st.retraces == 0, (tree_shards, "delete", st.retraces)
+            # exhaust every free slot -> the next insert appends one block
+            # on every shard and must bump the epoch (one retrace after)
+            free = sum(len(f) for f in h._free)
+            h.insert(rng.normal(size=(free + 1, d)).astype(np.float32))
+            assert eng.index_epoch == epoch0 + 1
+            _, _, st = eng.search(q, k)
+            assert st.retraces >= 1
+            _, _, st = eng.search(q, k)
+            assert st.retraces == 0
+        print("OK")
+    """)
+
+
+def test_sharded_tree_online_prunes_at_least_flat():
+    """Per-shard descent pruning stays a superset of the flat per-shard
+    pruning after mutations: apply the SAME mutation sequence to a flat
+    sharded engine and a tree_shards one; the tree engine's block-prune
+    fraction must be >= the flat engine's on every following search."""
+    from tests.test_distributed import _run
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.search import SearchEngine
+        rng = np.random.default_rng(3)
+        n, d, k = 640, 16, 5
+        centers = rng.normal(size=(8, d))
+        rows = (centers[rng.integers(0, 8, n)]
+                + 0.05 * rng.normal(size=(n, d))).astype(np.float32)
+        mesh = jax.make_mesh((8,), ("data",))
+        engs = [SearchEngine.build(rows, mesh=mesh, n_pivots=4,
+                                   block_size=16, tree_shards=ts)
+                for ts in (False, True)]
+        hs = [e.online(auto_reoptimize=False) for e in engs]
+        q = (centers[rng.integers(0, 8, 4)]
+             + 0.05 * rng.normal(size=(4, d))).astype(np.float32)
+        new = (centers[rng.integers(0, 8, 20)]
+               + 0.05 * rng.normal(size=(20, d))).astype(np.float32)
+        dead = list(range(0, 40, 2))
+        for e, h in zip(engs, hs):
+            e.search(q, k)
+            ids = h.insert(new)
+            h.delete(dead)
+            assert h._id_pos == hs[0]._id_pos      # identical placement
+        stats = [e.search(q, k)[2] for e in engs]
+        flat_blk = float(stats[0].block_prune_frac)
+        tree_blk = float(stats[1].block_prune_frac)
+        assert stats[1].tree_prune_frac is not None
+        assert tree_blk >= flat_blk - 1e-6, (tree_blk, flat_blk)
         print("OK")
     """)

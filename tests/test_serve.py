@@ -78,6 +78,38 @@ def test_knn_datastore_boosts_neighbor_tokens(rng):
     np.testing.assert_allclose(float(mixed.sum()), 1.0, atol=1e-5)
 
 
+def test_batcher_survives_sequential_event_loops(rng):
+    """Satellite regression (PR 9): ``submit`` lazily created the worker
+    task on the first caller's event loop and never re-checked, so reusing
+    a batcher across two sequential ``asyncio.run`` calls enqueued onto a
+    dead loop and hung forever.  The batcher must now detect the loop
+    change and re-create its worker + queue on the caller's loop."""
+    import asyncio
+
+    from repro.search import SearchEngine
+    from repro.serve.frontend import ContinuousBatcher
+
+    db = rng.normal(size=(128, 16)).astype(np.float32)
+    eng = SearchEngine.build(db, n_pivots=4, block_size=32)
+    batcher = ContinuousBatcher(eng, k=3, max_batch=4, max_wait_ms=1.0)
+
+    async def one(i):
+        sims, ids = await batcher.submit(db[i])
+        assert int(ids[0]) == i          # own row is its own top hit
+        assert sims.shape == (3,)
+
+    async def round_trip(n):
+        await asyncio.wait_for(
+            asyncio.gather(*(one(i) for i in range(n))), timeout=60)
+
+    asyncio.run(round_trip(5))
+    # pre-fix this second run waits forever on the first (dead) loop's
+    # queue; the wait_for turns the hang into a loud TimeoutError
+    asyncio.run(round_trip(5))
+    assert batcher.n_queries == 10
+    asyncio.run(asyncio.wait_for(batcher.close(), timeout=60))
+
+
 def test_knn_from_corpus_and_engine_integration():
     cfg, fns, params = _tiny()
     batches = [synthetic_batch(cfg, 2, 16, seed=s) for s in range(2)]

@@ -84,6 +84,9 @@ REQUIRED_EXACTNESS_LATENCY = (
     # sustained serving with interleaved online inserts/deletes must stay
     # brute-equal on the live corpus at every step (DESIGN.md §3.9)
     "online_matches_brute",
+    # the same serve loop on a sharded engine with deterministic
+    # cross-host placement + mid-run per-shard reoptimize (§3.10)
+    "sharded_online_matches_brute",
 )
 
 KNOWN_KINDS = ("pruning_power", "latency")

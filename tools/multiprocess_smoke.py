@@ -15,7 +15,13 @@ datastore as the single-controller path, across real process boundaries:
      to the single-process sharded pass (sims exactly equal; ids
      tie-aware), match brute force on the valid prefix, and that the
      per-shard descent (`tree_shards=True`) prunes at least what the
-     flat per-shard scan does.
+     flat per-shard scan does;
+  4. every participant then replays the same fixed online
+     insert/delete/reoptimize sequence (DESIGN.md §3.10); workers assert
+     the host-side id -> (shard, slot) mirrors and the post-mutation
+     search results stay bit-identical to the reference — placement is a
+     pure function of replicated host state, decided with zero extra
+     collectives.
 
 `JAX_PLATFORMS=cpu` is pinned in every subprocess: the container ships a
 TPU plugin with no TPU attached, and backend autodetection otherwise
@@ -92,6 +98,55 @@ def _search_all(engines, q, ks):
     return out
 
 
+def _mutation_all(engines, args):
+    """Fixed seeded online-mutation phase (DESIGN.md §3.10).
+
+    Every participant replays the SAME insert/delete/reoptimize sequence.
+    Placement decisions are pure host code over replicated mirrors — no
+    collective runs to decide them — so the id -> (shard, slot) digest
+    below, computed from each process's OWN host mirror, must agree
+    across processes and with the single-process reference.  The
+    sequence covers tail fills, a block append on every shard (the big
+    insert overflows the free lists), a per-shard repack, and
+    post-repack placement.
+    """
+    import numpy as np
+
+    import jax.numpy as jnp
+    from repro.core import ref
+
+    db, q = _corpus(args.rows, args.dim, args.queries)
+    rng = np.random.default_rng(17)
+    n_new = 2 * args.block_size + 7
+    new = ref.normalize(rng.normal(size=(n_new, args.dim))).astype(np.float32)
+    dead = sorted(int(x) for x in rng.choice(args.rows, size=25,
+                                             replace=False))
+    live = {i: db[i] for i in range(args.rows)}
+    live.update((args.rows + j, new[j]) for j in range(n_new))
+    for i in dead:
+        del live[i]
+    live_ids = np.array(sorted(live), np.int64)
+
+    out = {"online_live_ids": live_ids}
+    for name, eng in engines.items():
+        h = eng.online(auto_reoptimize=False)
+        got = h.insert(new[:9])
+        assert got == list(range(args.rows, args.rows + 9)), got
+        h.delete(dead)
+        h.insert(new[9:-4])          # overflows the tails: grows every shard
+        h.reoptimize()
+        h.insert(new[-4:])           # post-repack placement
+        place = np.array(sorted((i, s, sl)
+                                for i, (s, sl) in h._id_pos.items()),
+                         np.int64)
+        out[f"online_{name}_place"] = place
+        for k in K_SWEEP:
+            sims, ids, _stats = eng.search(jnp.asarray(q), k)
+            out[f"online_{name}_k{k}_sims"] = np.asarray(sims)
+            out[f"online_{name}_k{k}_ids"] = np.asarray(ids)
+    return out, q, live, live_ids
+
+
 def single_ref(args) -> int:
     """Reference pass: single-process sharded engine + fp64 brute oracle."""
     import numpy as np
@@ -101,11 +156,20 @@ def single_ref(args) -> int:
 
     db, q = _corpus(args.rows, args.dim, args.queries)
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    out = _search_all(_engines(db, mesh, args, distributed=False), q, K_SWEEP)
+    engines = _engines(db, mesh, args, distributed=False)
+    out = _search_all(engines, q, K_SWEEP)
     for k in K_SWEEP:
         sref, iref = ref.brute_force_knn(q, db, min(k, args.rows))
         out[f"brute_k{k}_sims"] = sref
         out[f"brute_k{k}_ids"] = iref
+    mut, qm, live, live_ids = _mutation_all(engines, args)
+    out.update(mut)
+    rows_live = np.stack([live[int(i)] for i in live_ids])
+    for k in K_SWEEP:
+        kb = min(k, live_ids.size)
+        sref, iref = ref.brute_force_knn(qm, rows_live, kb)
+        out[f"online_brute_k{k}_sims"] = sref
+        out[f"online_brute_k{k}_ids"] = live_ids[iref]
     np.savez(args.single_ref, n_devices=jax.device_count(), **out)
     print(f"reference pass ok: {jax.device_count()} devices -> "
           f"{args.single_ref}")
@@ -176,6 +240,39 @@ def worker(args) -> int:
         if not np.allclose(flat_blk, float(ref_npz[f"flat_k{k}_blk"]),
                            rtol=1e-6):
             failures.append(f"k={k}: flat stats diverge from single-process")
+
+    # --- online-mutation phase: deterministic cross-host row placement ---
+    mut, qm, live, live_ids = _mutation_all(engines, args)
+    if not np.array_equal(mut["online_flat_place"],
+                          mut["online_tree_place"]):
+        failures.append("online: flat/tree placement digests disagree "
+                        "within one process")
+    for name in ("flat", "tree"):
+        if not np.array_equal(mut[f"online_{name}_place"],
+                              ref_npz[f"online_{name}_place"]):
+            failures.append(
+                f"online {name}: id->(shard,slot) digest differs from the "
+                f"single-process reference — host mirrors drifted")
+        for k in K_SWEEP:
+            sims = mut[f"online_{name}_k{k}_sims"]
+            ids = mut[f"online_{name}_k{k}_ids"]
+            rs = ref_npz[f"online_{name}_k{k}_sims"]
+            ri = ref_npz[f"online_{name}_k{k}_ids"]
+            if not np.array_equal(sims, rs):
+                failures.append(f"online {name} k={k}: sims not "
+                                f"bit-identical after mutations")
+            if not np.array_equal(np.sort(ids, 1), np.sort(ri, 1)):
+                failures.append(f"online {name} k={k}: id sets differ "
+                                f"after mutations")
+            kb = min(k, live_ids.size)
+            bs_ = ref_npz[f"online_brute_k{k}_sims"]
+            bi = ref_npz[f"online_brute_k{k}_ids"]
+            if not np.allclose(sims[:, :kb], bs_, atol=3e-5):
+                failures.append(f"online {name} k={k}: sims diverge from "
+                                f"fp64 brute on the mutated live set")
+            if not np.array_equal(np.sort(ids[:, :kb], 1), np.sort(bi, 1)):
+                failures.append(f"online {name} k={k}: id set != brute on "
+                                f"the mutated live set (tie-aware)")
     for f in failures:
         print(f"[proc {pid}] FAIL: {f}", file=sys.stderr)
     if not failures:
