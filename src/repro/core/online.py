@@ -47,7 +47,6 @@ the kNN-LM value array, :mod:`repro.serve.knnlm`) never need remapping.
 """
 from __future__ import annotations
 
-from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -11,7 +11,6 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pivots import normalize
 from repro.search import SearchEngine
 
 

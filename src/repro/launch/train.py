@@ -13,10 +13,8 @@ with async checkpointing, preemption handling, and the straggler watchdog.
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
-import numpy as np
 
 
 def main(argv=None):
@@ -52,6 +50,7 @@ def main(argv=None):
 
     make_global = None
     if args.mesh != "host":
+        from repro.dist.compat import make_process_local_array
         from repro.launch.mesh import make_production_mesh
         from repro.launch.dryrun import param_shardings
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -60,8 +59,12 @@ def main(argv=None):
             multi_pod=(args.mesh == "multipod"), fsdp=True))
         dp = ("pod", "data") if args.mesh == "multipod" else ("data",)
         batch_sh = NamedSharding(mesh, P(dp))
+        # batch is sharded over all processes along axis 0 only, so the
+        # global row count is the local one scaled by process count
         make_global = lambda b: jax.tree.map(
-            lambda x: jax.make_array_from_process_local_data(batch_sh, x), b)
+            lambda x: make_process_local_array(
+                batch_sh, x,
+                (x.shape[0] * jax.process_count(),) + tuple(x.shape[1:])), b)
 
     step_fn = jax.jit(make_train_step(
         fns, cfg,

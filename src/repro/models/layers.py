@@ -13,7 +13,6 @@ applied per tile.  Softmax statistics are fp32.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ materializes [B, S, V] — see ``repro/train/losses.py``).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

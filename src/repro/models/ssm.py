@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.dist import sharding as shd
-from repro.models.config import ModelConfig, SSMConfig
+from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, norm_init, norm_apply
 
 

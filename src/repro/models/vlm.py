@@ -10,7 +10,6 @@ trainer).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax import Array
 
 from repro.models.config import ModelConfig

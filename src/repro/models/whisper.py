@@ -21,7 +21,6 @@ from repro.dist import sharding as shd
 from repro.models.config import ModelConfig
 from repro.models.layers import (attn_apply, attn_init, mlp_apply, mlp_init,
                                  norm_apply, norm_init)
-from repro.models.lm import lm_head_apply  # shared head
 
 
 def whisper_init(key, cfg: ModelConfig) -> dict:

@@ -8,7 +8,6 @@ Master weights are fp32; bf16 params are supported by casting on apply.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

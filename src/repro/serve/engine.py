@@ -9,14 +9,12 @@ next-token distributions with datastore neighbors — see
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig
-from repro.models.lm import embed_hidden, lm_forward
+from repro.models.lm import lm_forward
 from repro.models.registry import ModelFns
 
 

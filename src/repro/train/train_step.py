@@ -9,11 +9,9 @@ in/out shardings chosen by the launcher.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import Array
 
 from repro.models.config import ModelConfig
 from repro.models.registry import ModelFns

@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import numpy as np

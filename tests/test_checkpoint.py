@@ -1,5 +1,4 @@
 """Checkpoint manager: roundtrip, integrity, GC, crash-safety, remesh."""
-import json
 import os
 
 import jax

@@ -1,0 +1,177 @@
+"""repro-lint selftest: every rule against its fixture corpus.
+
+Fixtures live in tools/lint/selftest/ (see its README for the marker
+conventions).  Each fixture is linted under its declared *virtual* path
+so path-scoped rules fire; the harness asserts the exact
+``(line, rule)`` finding set — positives must fire, everything else
+must stay silent, and suppression comments must route findings to the
+suppressed list.  No jax import anywhere in this file: the linter is
+stdlib-only by design and these tests must stay cheap.
+"""
+from __future__ import annotations
+
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from tools.lint import all_rules, lint_source, load_baseline
+from tools.lint import cli as lint_cli
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tools" / "lint" / "selftest"
+FIXTURE_FILES = sorted(FIXTURES.glob("*.py"))
+
+_PATH_RE = re.compile(r"#\s*lint-fixture-path:\s*(\S+)")
+_EXPECT_RE = re.compile(r"#\s*EXPECT:\s*([A-Z0-9]+)")
+_EXPECT_SUP_RE = re.compile(r"#\s*EXPECT-SUPPRESSED:\s*([A-Z0-9]+)")
+
+RULE_IDS = ("R001", "R002", "R003", "R004",
+            "R005", "R006", "R007", "R008")
+
+
+def _load(path: Path):
+    src = path.read_text()
+    m = _PATH_RE.search(src)
+    assert m, f"{path.name}: missing '# lint-fixture-path:' header"
+    expected, expected_sup = set(), set()
+    for i, line in enumerate(src.splitlines(), 1):
+        expected.update((i, r) for r in _EXPECT_RE.findall(line))
+        expected_sup.update((i, r) for r in _EXPECT_SUP_RE.findall(line))
+    return src, m.group(1), expected, expected_sup
+
+
+# ---------------------------------------------------------------------------
+# the corpus: exact finding sets, positive and negative cases per rule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture", FIXTURE_FILES, ids=lambda p: p.stem)
+def test_fixture_findings_exact(fixture):
+    src, vpath, expected, expected_sup = _load(fixture)
+    ctx = lint_source(src, vpath)
+    got = {(f.line, f.rule) for f in ctx.findings}
+    assert got == expected, (
+        f"{fixture.name} (as {vpath}):\n"
+        f"  unexpected: {sorted(got - expected)}\n"
+        f"  missing:    {sorted(expected - got)}\n"
+        f"  findings:\n    " + "\n    ".join(map(str, ctx.findings)))
+    got_sup = {(f.line, f.rule) for f in ctx.suppressed}
+    assert got_sup == expected_sup, (
+        f"{fixture.name}: suppression mismatch — "
+        f"got {sorted(got_sup)}, want {sorted(expected_sup)}")
+
+
+def test_every_rule_has_positive_and_suppressed_case():
+    fired, suppressed = set(), set()
+    for f in FIXTURE_FILES:
+        _, _, expected, expected_sup = _load(f)
+        fired.update(r for _, r in expected)
+        suppressed.update(r for _, r in expected_sup)
+    assert fired == set(RULE_IDS), f"rules without a failing fixture: " \
+                                   f"{set(RULE_IDS) - fired}"
+    assert suppressed == set(RULE_IDS), \
+        f"rules without a suppression fixture: {set(RULE_IDS) - suppressed}"
+
+
+def test_every_rule_has_negative_coverage():
+    # each rule's fixtures contain clean constructs adjacent to the dirty
+    # ones: at least one fixture file that exercises the rule's territory
+    # with ZERO expected findings for it on some lines — approximated by
+    # requiring every fixture to contain non-flagged lines of code
+    for f in FIXTURE_FILES:
+        src, vpath, expected, _ = _load(f)
+        code_lines = [i for i, ln in enumerate(src.splitlines(), 1)
+                      if ln.strip() and not ln.strip().startswith("#")]
+        flagged = {i for i, _ in expected}
+        assert set(code_lines) - flagged, \
+            f"{f.name}: no negative (clean) lines at all"
+
+
+def test_registry_is_complete_and_documented():
+    rules = all_rules()
+    assert [r.id for r in rules] == sorted(r.id for r in rules)
+    assert {r.id for r in rules} >= set(RULE_IDS)
+    for r in rules:
+        assert r.title, f"{r.id}: empty title"
+        assert r.provenance, f"{r.id}: empty provenance"
+        assert (r.__doc__ or "").strip(), f"{r.id}: missing docstring"
+
+
+def test_syntax_error_becomes_finding():
+    ctx = lint_source("def broken(:\n", "scratch/broken.py")
+    assert [f.rule for f in ctx.findings] == ["E000"]
+
+
+# ---------------------------------------------------------------------------
+# the live tree is clean against the (empty) committed baseline
+# ---------------------------------------------------------------------------
+
+def test_live_tree_clean():
+    findings = lint_cli.run_repro_lint(REPO, list(lint_cli.DEFAULT_PATHS))
+    baseline = load_baseline(REPO / lint_cli.BASELINE)
+    fresh = [f for f in findings if f.key not in baseline]
+    assert not fresh, "live-tree findings:\n" + "\n".join(map(str, fresh))
+
+
+def test_committed_baseline_is_empty():
+    # the burn-down contract: ISSUE 10 ships the baseline at zero; a PR
+    # that wants to grandfather a finding must change this test too
+    assert load_baseline(REPO / lint_cli.BASELINE) == set()
+
+
+def test_fixture_corpus_is_excluded_from_live_scan():
+    files = lint_cli.iter_python_files(REPO, list(lint_cli.DEFAULT_PATHS))
+    assert not [f for f in files if "selftest" in f.parts]
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, --json shape, seeded violation fails the gate
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args):
+    return subprocess.run(  # repro-lint: disable=R003  (stdlib-only tool)
+        [sys.executable, "-m", "tools.lint", *args],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PATH": "/usr/bin:/bin", "PYTHONPATH": "src"},
+    )
+
+
+def test_cli_clean_tree_exits_zero():
+    proc = _run_cli("--json", "--no-ruff")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["findings"] == []
+    assert payload["stale_baseline"] == []
+
+
+def test_cli_seeded_violation_fails(tmp_path):
+    # the acceptance-criteria scenario: a raw top_k slice in a scratch
+    # file must fail the gate
+    bad = tmp_path / "scratch_seeded.py"
+    bad.write_text(
+        "import jax\n\n"
+        "def warm(scores, k):\n"
+        "    return jax.lax.top_k(scores, k)[0][:, -1]\n")
+    rc = lint_cli.main([str(bad), "--no-ruff"])
+    assert rc == 1
+    findings = lint_cli.run_repro_lint(REPO, [str(bad)])
+    assert [(f.line, f.rule) for f in findings] == [(4, "R001")]
+
+
+def test_cli_list_rules():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in RULE_IDS:
+        assert rid in proc.stdout
+
+
+def test_cli_require_ruff_fails_when_missing(tmp_path, monkeypatch):
+    import shutil as _shutil
+    monkeypatch.setattr(_shutil, "which", lambda name: None)
+    rc, note = lint_cli.run_ruff(REPO, ["src"], require=True)
+    assert rc == 1 and "REQUIRED" in note
+    rc, note = lint_cli.run_ruff(REPO, ["src"], require=False)
+    assert rc == 0 and "skipped" in note

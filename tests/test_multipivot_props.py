@@ -11,7 +11,6 @@ brute-exact with the ``n_pivots`` knob switched on.
 """
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bounds, ref

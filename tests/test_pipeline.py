@@ -1,6 +1,5 @@
 """Data pipeline: determinism, resumability, shard partitioning, dedup."""
 import numpy as np
-import pytest
 
 from repro.data.dedup import dedup_mask, embed_tokens, find_near_duplicates
 from repro.data.pipeline import ShardInfo, SyntheticLM, TokenFileSource

@@ -2,7 +2,6 @@
 equal decode over a full-length cache once masking is applied."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import smoke_config
 from repro.models import model_fns, synthetic_batch

@@ -3,11 +3,9 @@ datastore measurably shifts next-token probabilities toward neighbors."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import smoke_config
 from repro.models import model_fns, synthetic_batch
-from repro.models.lm import embed_hidden
 from repro.serve.engine import Engine
 from repro.serve.knnlm import KNNDatastore
 

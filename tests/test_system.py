@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the paper's system: the full pipeline
 (embed -> dedup -> train -> datastore -> kNN-LM serve) on a tiny model."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config

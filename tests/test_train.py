@@ -5,10 +5,9 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import smoke_config
-from repro.data.pipeline import SyntheticLM, ShardInfo
+from repro.data.pipeline import SyntheticLM
 from repro.models import model_fns
 from repro.optim import compression
 from repro.train.train_step import init_state, make_train_step

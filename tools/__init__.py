@@ -1,0 +1,7 @@
+"""Repo tooling (CI gates, smokes, and the repro-lint static analyzer).
+
+A regular package so ``python -m tools.lint`` and ``import tools.lint``
+work from the repo root (pytest already puts ``.`` and ``src`` on the
+path via pyproject's ``pythonpath``).  The standalone scripts in this
+directory are still run directly (``python tools/check_docs_links.py``).
+"""

@@ -1,0 +1,17 @@
+"""repro-lint: AST static analysis for the repo's JAX/Pallas invariants.
+
+Run ``python -m tools.lint`` from the repo root.  See docs/lint.md for
+the rule table and the suppression/baseline contract.
+"""
+from tools.lint.core import (  # noqa: F401
+    FileContext,
+    Finding,
+    Rule,
+    all_rules,
+    lint_file,
+    lint_source,
+    load_baseline,
+    register,
+    repo_root,
+)
+from tools.lint import rules as _rules  # noqa: F401  (registers R001-R008)

@@ -1,0 +1,169 @@
+"""The ``python -m tools.lint`` entry point.
+
+One command runs both halves of the CI ``lint`` job:
+
+* **repro-lint** — the AST rules in :mod:`tools.lint.rules`, stdlib-only
+  (no jax import, so the gate is cheap enough to run first in CI);
+* **ruff** — the pinned generic layer (unused imports, undefined names,
+  mutable default args; config in pyproject.toml).  ruff is not baked
+  into the dev container, so locally it is *skipped with a note* when
+  the binary is absent; CI installs the pinned version and passes
+  ``--require-ruff`` so absence fails there.
+
+Exit status is non-zero iff any non-baselined repro-lint finding exists
+(or ruff fails / is missing under ``--require-ruff``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+from tools.lint.core import (
+    Finding,
+    all_rules,
+    lint_file,
+    load_baseline,
+    repo_root,
+)
+
+#: directories scanned by default (repo-relative)
+DEFAULT_PATHS = ("src", "tools", "benchmarks", "tests")
+
+#: never scanned: the fixture corpus exists to violate the rules
+EXCLUDED = ("tools/lint/selftest",)
+
+BASELINE = "tools/lint/baseline.json"
+
+
+def iter_python_files(root: Path, paths: list[str]) -> list[Path]:
+    """Python files under ``paths`` (repo-relative), fixture corpus
+    excluded, sorted for deterministic output."""
+    out: list[Path] = []
+    for p in paths:
+        base = root / p
+        if base.is_file() and base.suffix == ".py":
+            candidates = [base]
+        else:
+            candidates = sorted(base.rglob("*.py"))
+        for f in candidates:
+            try:
+                rel = f.relative_to(root).as_posix()
+            except ValueError:      # outside the repo (scratch/seeded files)
+                rel = f.as_posix()
+            if any(rel == e or rel.startswith(e + "/") for e in EXCLUDED):
+                continue
+            out.append(f)
+    return out
+
+
+def run_repro_lint(root: Path, paths: list[str]) -> list[Finding]:
+    rules = all_rules()
+    findings: list[Finding] = []
+    for f in iter_python_files(root, paths):
+        findings.extend(lint_file(f, root=root, rules=rules).findings)
+    findings.sort(key=lambda x: (x.path, x.line, x.col, x.rule))
+    return findings
+
+
+def run_ruff(root: Path, paths: list[str], require: bool) -> tuple[int, str]:
+    """Return (exit_code, note).  Exit 0 with a note when ruff is absent
+    and not required — the container does not ship it; CI does."""
+    exe = shutil.which("ruff")
+    if exe is None:
+        if require:
+            return 1, "ruff: REQUIRED but not installed (CI pins ruff==0.8.4)"
+        return 0, "ruff: not installed, skipped (CI runs it; " \
+                  "pass --require-ruff to fail instead)"
+    proc = subprocess.run(  # repro-lint: disable=R003  (ruff never imports jax)
+        [exe, "check", *paths], cwd=root,
+        capture_output=True, text=True)
+    note = proc.stdout.strip() or proc.stderr.strip() or "ruff: clean"
+    return proc.returncode, note
+
+
+def write_baseline(root: Path, findings: list[Finding]) -> None:
+    payload = {
+        "_comment": "Grandfathered repro-lint findings (path:line:rule). "
+                    "Shipped empty; see docs/lint.md before adding to it.",
+        "findings": sorted(f.key for f in findings),
+    }
+    (root / BASELINE).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint (AST invariants) + ruff, one gate.")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to scan (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--baseline", default=BASELINE,
+                    help="baseline file of grandfathered findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "(burn-down tool; do not ship a non-empty one "
+                         "without a docs/lint.md entry)")
+    ap.add_argument("--no-ruff", action="store_true",
+                    help="repro-lint only")
+    ap.add_argument("--require-ruff", action="store_true",
+                    help="fail (rather than skip) when ruff is missing — "
+                         "CI sets this")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    root = repo_root()
+    paths = list(args.paths) if args.paths else list(DEFAULT_PATHS)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id}  {r.title}")
+            print(f"      provenance: {r.provenance}")
+        return 0
+
+    findings = run_repro_lint(root, paths)
+
+    if args.write_baseline:
+        write_baseline(root, findings)
+        print(f"baseline written: {len(findings)} finding(s) -> "
+              f"{args.baseline}")
+        return 0
+
+    baseline = load_baseline(root / args.baseline)
+    fresh = [f for f in findings if f.key not in baseline]
+    stale = baseline - {f.key for f in findings}
+
+    ruff_rc, ruff_note = (0, "ruff: skipped (--no-ruff)") if args.no_ruff \
+        else run_ruff(root, paths, args.require_ruff)
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.as_dict() for f in fresh],
+            "baselined": sorted(baseline & {f.key for f in findings}),
+            "stale_baseline": sorted(stale),
+            "ruff": {"exit": ruff_rc, "note": ruff_note},
+        }, indent=2))
+    else:
+        for f in fresh:
+            print(f)
+        if stale:
+            print(f"note: {len(stale)} baseline entr"
+                  f"{'y is' if len(stale) == 1 else 'ies are'} stale "
+                  f"(fixed or moved) — regenerate with --write-baseline",
+                  file=sys.stderr)
+        print(ruff_note, file=sys.stderr)
+        n_files = len(iter_python_files(root, paths))
+        print(f"repro-lint: {len(fresh)} finding(s) in {n_files} files "
+              f"({len(baseline)} baselined)", file=sys.stderr)
+
+    return 1 if (fresh or ruff_rc) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,333 @@
+"""repro-lint core: single-parse AST analysis with a rule registry.
+
+The framework is deliberately tiny and stdlib-only (no jax import — the
+CI ``lint`` job runs before anything heavier installs):
+
+* each file is parsed ONCE into a :class:`FileContext` that owns the
+  shared analyses every rule needs (import-alias resolution, a parent
+  map, the traced-function set for jit-body rules);
+* rules register with :func:`register` and declare ``visit_<NodeType>``
+  methods; one ``ast.walk`` dispatches every node to every applicable
+  rule — O(nodes x matching-rules), not O(nodes x rules x passes);
+* findings are suppressible per line with ``# repro-lint: disable=R001``
+  (comma-separate several ids) and grandfatherable through a committed
+  JSON baseline (:func:`load_baseline`; shipped empty — see
+  docs/lint.md for the burn-down contract).
+
+Rules live in :mod:`tools.lint.rules`; the CLI in :mod:`tools.lint.cli`.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = [
+    "Finding", "FileContext", "Rule", "register", "all_rules",
+    "lint_file", "lint_source", "load_baseline", "repo_root",
+]
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9,\s]+)")
+
+#: callables/attribute roots treated as engine-like mutable state holders
+#: by the retrace-hazard rule (R008)
+ENGINE_NAMES = frozenset({"self", "eng", "engine"})
+
+
+def repo_root() -> Path:
+    """The repository root (two levels above this package)."""
+    return Path(__file__).resolve().parents[2]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str            # repo-relative posix path (or the virtual path)
+    line: int
+    col: int
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Stable identity used by the baseline: ``path:line:rule``."""
+        return f"{self.path}:{self.line}:{self.rule}"
+
+    def as_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class Rule:
+    """Base class: subclass, set ``id``/``title``/``provenance``, register.
+
+    ``visit_<NodeType>(node, ctx)`` methods receive every matching AST
+    node of the (single) walk plus the shared :class:`FileContext`.
+    ``begin_file`` / ``end_file`` bracket the walk.  ``applies`` gates the
+    rule per file (path-scoped rules override it) — a rule that does not
+    apply costs nothing during the walk.
+    """
+
+    id: str = "R000"
+    title: str = ""
+    provenance: str = ""
+
+    def applies(self, ctx: "FileContext") -> bool:
+        return True
+
+    def begin_file(self, ctx: "FileContext") -> None:
+        pass
+
+    def end_file(self, ctx: "FileContext") -> None:
+        pass
+
+
+_REGISTRY: list[type[Rule]] = []
+
+
+def register(cls: type[Rule]) -> type[Rule]:
+    """Class decorator: add a :class:`Rule` subclass to the registry."""
+    assert cls.id not in {r.id for r in _REGISTRY}, f"duplicate rule {cls.id}"
+    _REGISTRY.append(cls)
+    return cls
+
+
+def all_rules() -> list[Rule]:
+    """Fresh instances of every registered rule, id-sorted."""
+    return [cls() for cls in sorted(_REGISTRY, key=lambda c: c.id)]
+
+
+# ---------------------------------------------------------------------------
+# per-file context: shared analyses, computed lazily, parsed exactly once
+# ---------------------------------------------------------------------------
+
+_SCOPE_TYPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+@dataclass
+class FileContext:
+    """Everything the rules share about one parsed file."""
+
+    path: str                     # repo-relative posix path used in findings
+    source: str
+    tree: ast.Module
+    findings: list[Finding] = field(default_factory=list)
+    suppressed: list[Finding] = field(default_factory=list)
+    _parents: dict | None = None
+    _aliases: dict | None = None
+    _traced: set | None = None
+    _suppressions: dict | None = None
+
+    # ------------------------------------------------------------ reporting
+    def report(self, rule: Rule, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        f = Finding(rule.id, self.path, line, col, message)
+        if rule.id in self.suppressions.get(line, set()):
+            self.suppressed.append(f)
+        else:
+            self.findings.append(f)
+
+    @property
+    def suppressions(self) -> dict[int, set[str]]:
+        """``{lineno: {rule ids}}`` from ``# repro-lint: disable=`` comments."""
+        if self._suppressions is None:
+            sup: dict[int, set[str]] = {}
+            for i, text in enumerate(self.source.splitlines(), 1):
+                m = _SUPPRESS_RE.search(text)
+                if m:
+                    sup[i] = {r.strip() for r in m.group(1).split(",")
+                              if r.strip()}
+            self._suppressions = sup
+        return self._suppressions
+
+    # ----------------------------------------------------- shared analyses
+    @property
+    def parents(self) -> dict:
+        """``{child node: parent node}`` over the whole tree."""
+        if self._parents is None:
+            p = {}
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    p[child] = node
+            self._parents = p
+        return self._parents
+
+    @property
+    def aliases(self) -> dict[str, str]:
+        """Import alias map: local name -> fully dotted module/attr path."""
+        if self._aliases is None:
+            al: dict[str, str] = {}
+            for node in ast.walk(self.tree):
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        al[a.asname or a.name.split(".")[0]] = (
+                            a.name if a.asname else a.name.split(".")[0])
+                elif isinstance(node, ast.ImportFrom) and node.module \
+                        and node.level == 0:
+                    for a in node.names:
+                        if a.name != "*":
+                            al[a.asname or a.name] = (
+                                f"{node.module}.{a.name}")
+            self._aliases = al
+        return self._aliases
+
+    def full_name(self, node: ast.AST) -> str | None:
+        """Dotted path of a Name/Attribute chain with the root alias
+        expanded (``pl.BlockSpec`` -> ``jax.experimental.pallas.BlockSpec``);
+        None for anything that is not a pure attribute chain."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id, node.id)
+        return ".".join([root] + parts[::-1])
+
+    # --------------------------------------------------- traced-code model
+    def _is_jit_expr(self, e: ast.AST) -> bool:
+        """Is ``e`` a jit transform: ``jax.jit``, ``jax.jit(...)``, or
+        ``functools.partial(jax.jit, ...)``?"""
+        if self.full_name(e) == "jax.jit":
+            return True
+        if isinstance(e, ast.Call):
+            fn = self.full_name(e.func)
+            if fn == "jax.jit":
+                return True
+            if fn == "functools.partial" and e.args \
+                    and self.full_name(e.args[0]) == "jax.jit":
+                return True
+        return False
+
+    @property
+    def traced_functions(self) -> set:
+        """Function/lambda nodes whose bodies run under a jax trace: jit
+        roots (decorated, or passed to ``jax.jit(...)``) and Pallas kernel
+        functions (first argument of ``pl.pallas_call``).  Code lexically
+        nested inside one of these is traced too — use :meth:`in_traced`.
+        """
+        if self._traced is None:
+            roots: set = set()
+            wanted_names: set[str] = set()
+            for node in ast.walk(self.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if any(self._is_jit_expr(d) for d in node.decorator_list):
+                        roots.add(node)
+                elif isinstance(node, ast.Call):
+                    fn = self.full_name(node.func)
+                    if fn == "jax.jit" and node.args:
+                        tgt = node.args[0]
+                        if isinstance(tgt, ast.Lambda):
+                            roots.add(tgt)
+                        elif isinstance(tgt, ast.Name):
+                            wanted_names.add(tgt.id)
+                    elif fn == "jax.experimental.pallas.pallas_call" \
+                            and node.args and isinstance(node.args[0],
+                                                         ast.Name):
+                        wanted_names.add(node.args[0].id)
+            if wanted_names:
+                for node in ast.walk(self.tree):
+                    if isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) \
+                            and node.name in wanted_names:
+                        roots.add(node)
+            self._traced = roots
+        return self._traced
+
+    def in_traced(self, node: ast.AST) -> bool:
+        """True when ``node`` sits lexically inside a traced function."""
+        cur = node
+        while cur is not None:
+            if cur in self.traced_functions:
+                return True
+            cur = self.parents.get(cur)
+        return False
+
+    def enclosing_function(self, node: ast.AST):
+        """Nearest enclosing FunctionDef/AsyncFunctionDef, or None."""
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def enclosing_scope_names(self, node: ast.AST) -> list[str]:
+        """Names of every enclosing function/class, innermost first."""
+        names = []
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                names.append(cur.name)
+            cur = self.parents.get(cur)
+        return names
+
+
+# ---------------------------------------------------------------------------
+# the single-walk dispatcher
+# ---------------------------------------------------------------------------
+
+def lint_source(source: str, path: str,
+                rules: list[Rule] | None = None) -> FileContext:
+    """Parse ``source`` once and run every applicable rule over one walk.
+
+    ``path`` is the repo-relative posix path used both in findings and by
+    path-scoped rules' ``applies`` — selftest fixtures pass a *virtual*
+    path here to exercise those rules.
+    """
+    rules = all_rules() if rules is None else rules
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        ctx = FileContext(path, source, ast.Module(body=[], type_ignores=[]))
+        ctx.findings.append(Finding(
+            "E000", path, e.lineno or 1, (e.offset or 1) - 1,
+            f"syntax error: {e.msg}"))
+        return ctx
+    ctx = FileContext(path, source, tree)
+    active = [r for r in rules if r.applies(ctx)]
+    dispatch: dict[str, list] = {}
+    for rule in active:
+        rule.begin_file(ctx)
+        for name in dir(rule):
+            if name.startswith("visit_"):
+                dispatch.setdefault(name[6:], []).append(getattr(rule, name))
+    if dispatch:
+        for node in ast.walk(tree):
+            for handler in dispatch.get(type(node).__name__, ()):
+                handler(node, ctx)
+    for rule in active:
+        rule.end_file(ctx)
+    ctx.findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return ctx
+
+
+def lint_file(file_path: Path, root: Path | None = None,
+              virtual_path: str | None = None,
+              rules: list[Rule] | None = None) -> FileContext:
+    """Lint one file; findings carry its repo-relative (or virtual) path."""
+    root = root or repo_root()
+    if virtual_path is None:
+        try:
+            virtual_path = file_path.resolve().relative_to(root).as_posix()
+        except ValueError:
+            virtual_path = file_path.as_posix()
+    return lint_source(file_path.read_text(), virtual_path, rules)
+
+
+def load_baseline(path: Path) -> set[str]:
+    """Grandfathered finding keys (``path:line:rule``) from the committed
+    baseline.  Shipped empty; regenerate deliberately with
+    ``python -m tools.lint --write-baseline`` only while burning down."""
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("findings", []))

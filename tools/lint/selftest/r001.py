@@ -1,0 +1,38 @@
+# lint-fixture-path: benchmarks/fixture_r001.py
+"""R001 fixtures: the TopkRewriter-breaking double subscript."""
+import jax
+from jax import lax
+
+
+def bad(scores, k):
+    return jax.lax.top_k(scores, k)[0][:, -1]  # EXPECT: R001
+
+
+def bad_alias(scores, k):
+    vals = lax.top_k(scores, k)[0][:, -1]  # EXPECT: R001
+    return vals
+
+
+def bad_integer_index(scores, k):
+    return lax.top_k(scores, k)[0][-1]  # EXPECT: R001
+
+
+def good_tuple_unpack(scores, k):
+    # the tree.py idiom: unpack, then barrier before slicing — the slice
+    # is on a barrier output, not on top_k(...)[0]
+    top_s, sel = jax.lax.top_k(scores, k)
+    return top_s[:, -1], sel
+
+
+def good_values_only(scores, k):
+    # taking [0] alone keeps the intact [m, k] block: rewriter-safe
+    return jax.lax.top_k(scores, k)[0]
+
+
+def good_other_function(scores, k):
+    return sorted(scores)[0][:k]  # not top_k
+
+
+def suppressed(scores, k):
+    # deliberate, reviewed site
+    return lax.top_k(scores, k)[0][:, -1]  # repro-lint: disable=R001  # EXPECT-SUPPRESSED: R001

@@ -1,0 +1,15 @@
+# lint-fixture-path: src/repro/kernels/ref.py
+"""R001 negative: kth_value in kernels/ref.py is the sanctioned site."""
+import jax
+
+
+def kth_value(scores, k):
+    # the real kth_value wraps this in optimization_barrier; the rule
+    # exempts exactly this (path, function) pair, so even the raw
+    # inline pattern stays silent here
+    return jax.lax.top_k(scores, k)[0][:, -1]
+
+
+def other_function(scores, k):
+    # same file, different function: NOT exempt
+    return jax.lax.top_k(scores, k)[0][:, -1]  # EXPECT: R001

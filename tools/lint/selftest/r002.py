@@ -1,0 +1,30 @@
+# lint-fixture-path: src/repro/search/fixture_r002.py
+"""R002 fixtures: version-shimmed jax APIs outside dist/compat.py."""
+import jax
+import jax.experimental.shard_map  # EXPECT: R002
+from jax.experimental import shard_map  # EXPECT: R002
+
+
+def bad_call(f, mesh, specs):
+    return jax.shard_map(f, mesh=mesh, in_specs=specs)  # EXPECT: R002
+
+
+def bad_barrier(x):
+    return jax.lax.optimization_barrier(x)  # EXPECT: R002
+
+
+def bad_process_local(sh, x):
+    return jax.make_array_from_process_local_data(sh, x)  # EXPECT: R002
+
+
+def good_compat_import(x):
+    from repro.dist.compat import shard_map, optimization_barrier
+    return optimization_barrier(shard_map(x))
+
+
+def good_unrelated_jax(x):
+    return jax.lax.top_k(x, 4)
+
+
+def suppressed(f, mesh):
+    return jax.shard_map(f, mesh=mesh)  # repro-lint: disable=R002  # EXPECT-SUPPRESSED: R002

@@ -1,0 +1,12 @@
+# lint-fixture-path: src/repro/dist/compat.py
+"""R002 negative: dist/compat.py is the one sanctioned shim location."""
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    return jax.experimental.shard_map.shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def optimization_barrier(x):
+    return jax.lax.optimization_barrier(x)

@@ -1,0 +1,38 @@
+# lint-fixture-path: tools/fixture_r003.py
+"""R003 fixtures: subprocess spawns must pin JAX_PLATFORMS in scope."""
+import os
+import subprocess
+import sys
+from subprocess import check_call
+
+
+def bad_run():
+    subprocess.run([sys.executable, "-c", "pass"])  # EXPECT: R003
+
+
+def bad_popen():
+    return subprocess.Popen([sys.executable, "worker.py"])  # EXPECT: R003
+
+
+def bad_from_import():
+    check_call([sys.executable, "-m", "pytest"])  # EXPECT: R003
+
+
+def good_env_literal():
+    env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+    subprocess.run([sys.executable, "-c", "pass"], env=env)
+
+
+def good_setdefault():
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.Popen([sys.executable, "worker.py"], env=env)
+
+
+def good_not_a_spawn():
+    subprocess.list2cmdline([sys.executable])
+
+
+def suppressed_env_built_elsewhere(env):
+    # env is assembled by the caller; the suppression makes that reviewable
+    check_call(["ruff", "check"], env=env)  # repro-lint: disable=R003  # EXPECT-SUPPRESSED: R003

@@ -1,0 +1,8 @@
+# lint-fixture-path: tools/fixture_r003_toplevel.py
+"""R003 negative: a module-level spawn sees the module as its scope."""
+import os
+import subprocess
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+subprocess.run([sys.executable, "-c", "pass"], env=dict(os.environ))

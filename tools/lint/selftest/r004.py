@@ -1,0 +1,44 @@
+# lint-fixture-path: src/repro/search/fixture_r004.py
+"""R004 fixtures: host-sync calls inside jit-traced bodies."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_decorated(x):
+    v = x.sum().item()  # EXPECT: R004
+    f = float(jnp.max(x))  # EXPECT: R004
+    a = np.asarray(x)  # EXPECT: R004
+    return v, f, a
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def bad_partial_jit(x, k):
+    return int(x.argmax())  # EXPECT: R004
+
+
+bad_jitted_lambda = jax.jit(lambda x: float(jnp.sum(x)))  # EXPECT: R004
+
+
+def good_host_side(x):
+    # not traced: host conversion is exactly where it belongs
+    return float(jnp.max(x)), x.sum().item(), np.asarray(x)
+
+
+@jax.jit
+def good_static_shape_math(x):
+    n = int(x.shape[0])  # python int of a static shape: no sync
+    return x * n
+
+
+@jax.jit
+def good_pure_jnp(x):
+    return jnp.maximum(x, 0.0).sum()
+
+
+@jax.jit
+def suppressed(x):
+    return float(jnp.max(x))  # repro-lint: disable=R004  # EXPECT-SUPPRESSED: R004

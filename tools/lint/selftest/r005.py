@@ -1,0 +1,30 @@
+# lint-fixture-path: src/repro/core/online.py
+"""R005 fixtures: collectives in the online-mutation surface."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def insert_rows(shard, row):
+    total = lax.psum(jnp.ones(()), "shards")  # EXPECT: R005
+    return shard.at[0].set(row), total
+
+
+def delete_rows(shard, ids):
+    mirror = jax.lax.all_gather(ids, "shards")  # EXPECT: R005
+    return shard, mirror
+
+
+def replicated_row_ids(ids):
+    # THE whitelisted site: the id-mirror re-replication (DESIGN.md §3.10)
+    return jax.lax.all_gather(ids, "shards")
+
+
+def grow_shard(shard, factor):
+    # collective-free mutation: placement is a pure function of
+    # replicated host state
+    return jnp.pad(shard, ((0, shard.shape[0] * (factor - 1)), (0, 0)))
+
+
+def suppressed_migration(x):
+    return lax.ppermute(x, "shards", [(0, 1)])  # repro-lint: disable=R005  # EXPECT-SUPPRESSED: R005

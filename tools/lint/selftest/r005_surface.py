@@ -1,0 +1,29 @@
+# lint-fixture-path: src/repro/core/distributed.py
+"""R005 scoping in distributed.py: only the mutation surface is in scope
+(ShardedMutationOps / make_sharded_mutation); the §3.6/§3.7 search-side
+merge collectives in the same file are legal by design."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class ShardedMutationOps:
+    def insert(self, shard, row):
+        lax.psum(jnp.ones(()), "shards")  # EXPECT: R005
+        return shard
+
+    def replicated_row_ids(self, ids):
+        # whitelisted even inside the surface class
+        return jax.lax.all_gather(ids, "shards")
+
+
+def make_sharded_mutation(handle):
+    def _delete(shard, ids):
+        return lax.pmax(ids, "shards")  # EXPECT: R005
+    return _delete
+
+
+def sharded_search_local(scores, k):
+    # search path, not mutation surface: the tau merge's collective is fine
+    top = jax.lax.top_k(scores, k)
+    return lax.pmax(top[1].astype(jnp.float32), "shards")

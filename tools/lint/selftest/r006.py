@@ -1,0 +1,39 @@
+# lint-fixture-path: src/repro/kernels/fixture_r006.py
+"""R006 fixtures: fp64 / x64 mode inside a device-path module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64  # flagged at use, not import
+
+
+def bad_jnp_dtype(x):
+    return x.astype(jnp.float64)  # EXPECT: R006
+
+
+def bad_np_dtype(x):
+    return np.float64(x)  # EXPECT: R006
+
+
+def bad_dtype_string(x):
+    return x.astype("float64")  # EXPECT: R006
+
+
+def bad_x64_toggle():
+    jax.config.update("jax_enable_x64", True)  # EXPECT: R006
+
+
+def bad_x64_context(x):
+    with enable_x64():  # EXPECT: R006
+        return jnp.asarray(x)
+
+
+def good_fp32(x):
+    return x.astype(jnp.float32)
+
+
+def good_accum(x):
+    return jnp.sum(x, dtype=jnp.float32)
+
+
+def suppressed(x):
+    return x.astype(jnp.float64)  # repro-lint: disable=R006  # EXPECT-SUPPRESSED: R006

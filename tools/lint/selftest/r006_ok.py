@@ -1,0 +1,10 @@
+# lint-fixture-path: src/repro/core/pivots.py
+"""R006 negative: build/oracle modules legitimately use fp64
+(DESIGN.md §3.8: fp64 at build, fp32 stored)."""
+import numpy as np
+
+
+def build_pivot_table(db, pivots):
+    # the oracle math runs in float64 on the host, by design
+    sims = np.float64(db) @ np.float64(pivots).T
+    return sims.astype("float64")

@@ -1,0 +1,86 @@
+# lint-fixture-path: src/repro/kernels/fixture_r007.py
+"""R007 fixtures: pallas_call index_map arity and unread kernel operands."""
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def bad_arity(x):
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    grid = (4, 4)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],  # EXPECT: R007
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 32), x.dtype),
+    )(x)
+
+
+def bad_unread_validity(x, row_valid):
+    def kernel(db_ref, rv_ref, o_ref):  # EXPECT: R007
+        # rv_ref accepted but never read: tombstones silently unmasked
+        o_ref[...] = db_ref[...] * 2.0
+
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0)),
+                  pl.BlockSpec((8, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 8), x.dtype),
+    )(x, row_valid)
+
+
+def bad_prefetch_arity(x, order):
+    def kernel(ord_ref, x_ref, o_ref):
+        o_ref[...] = x_ref[...] + ord_ref[0]
+
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],  # EXPECT: R007
+        out_specs=pl.BlockSpec((8,), lambda i, ord_: (i,)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((32,), x.dtype))(order, x)
+
+
+def good_matching(x, row_valid):
+    def kernel(db_ref, rv_ref, o_ref):
+        vmask = rv_ref[...][:, 0] > 0
+        o_ref[...] = db_ref[...] * vmask[:, None]
+
+    grid = (4, 2)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+                  pl.BlockSpec((8, 1), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 16), x.dtype),
+    )(x, row_valid)
+
+
+def good_dynamic_grid(x, grid):
+    # grid rank not statically resolvable: skipped, not guessed
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((32,), x.dtype),
+    )(x)
+
+
+def suppressed_scratch_operand(x):
+    def kernel(x_ref, scratch_ref, o_ref):  # repro-lint: disable=R007  # EXPECT-SUPPRESSED: R007
+        o_ref[...] = x_ref[...]
+
+    return kernel

@@ -1,0 +1,48 @@
+# lint-fixture-path: src/repro/search/fixture_r008.py
+"""R008 fixtures: jitted closures reading mutable engine state."""
+import jax
+
+
+class Engine:
+    def make_fused_bad(self):
+        @jax.jit
+        def fused(index, queries):
+            # trace-time capture of mutable engine state: stale snapshot
+            return index @ queries.T * self.tau  # EXPECT: R008
+        return fused
+
+    def make_fused_good(self):
+        # the backends.py idiom: capture into locals BEFORE the closure
+        tau = self.tau
+        note = self._note_trace
+
+        @jax.jit
+        def fused(index, queries):
+            note()
+            return index @ queries.T * tau
+        return fused
+
+    def dispatch_good(self, entry):
+        # NOT jitted: the engine fetches self.index at call time — legal,
+        # this is exactly engine.py's non-donate wrapper
+        return lambda q: entry(self.index, q)
+
+
+def make_bad_lambda(eng):
+    return jax.jit(lambda q: eng.index @ q.T)  # EXPECT: R008
+
+
+def make_good_threaded(eng):
+    body = jax.jit(lambda index, q: index @ q.T)
+    return lambda q: body(eng.index, q)
+
+
+@jax.jit
+def good_param_named_self(self, q):
+    # 'self' is a parameter of the traced function, not a capture:
+    # the attribute read flows through an argument, which is the contract
+    return self.T @ q
+
+
+def make_suppressed(eng):
+    return jax.jit(lambda q: eng.static_dim * q)  # repro-lint: disable=R008  # EXPECT-SUPPRESSED: R008
